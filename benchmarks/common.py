@@ -1,0 +1,43 @@
+"""Benchmark utilities: timing, CSV emission, workload sizing.
+
+CPU-container note: the paper's GPU throughputs (GB/s) are not reproducible
+here; benchmarks validate the paper's *relative* claims (GFTR vs GFUR,
+PHJ vs SMJ, skew robustness, memory ordering) at CPU-feasible sizes and
+emit `name,us_per_call,derived` CSV rows, where `derived` carries the
+figure-relevant ratio (speedup, GB/s-equivalent, bytes)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+# default row counts (CPU-feasible; override with REPRO_BENCH_SCALE env)
+import os
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+N_BASE = int((1 << 18) * SCALE)  # 262k rows ~ "1G"-analogue unit
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time (us) of jit-compiled fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def join_throughput(n_r: int, n_s: int, us: float) -> str:
+    """Paper metric: (|R|+|S|) tuples / total time."""
+    return f"{(n_r + n_s) / (us / 1e6) / 1e6:.1f} Mtuples/s"

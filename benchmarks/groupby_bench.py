@@ -1,0 +1,62 @@
+"""Grouped-aggregation benchmarks [extension-per-assigned-title]:
+strategy x cardinality x skew, mirroring the join matrix."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Table, group_aggregate
+
+from .common import N_BASE, emit, time_fn
+
+
+def cardinality_sweep():
+    n = 2 * N_BASE
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    for g in (64, 4096, 262144):
+        keys = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        t = Table({"k": keys, "v": vals})
+        for strat in ("sort", "partition_hash", "scatter"):
+            f = jax.jit(functools.partial(
+                group_aggregate, key="k", aggs={"v": "sum"},
+                num_groups=max(2 * g, 256), strategy=strat))
+            us = time_fn(f, t)
+            emit(f"groupby/G{g}/{strat}", us, f"{n/(us/1e6)/1e6:.1f} Mrows/s")
+
+
+def skew_sweep():
+    n = 2 * N_BASE
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    for z, tag in ((0.0, "uniform"), (1.5, "zipf1.5")):
+        if z:
+            keys = jnp.asarray(((rng.zipf(z, n) - 1) % 4096).astype(np.int32))
+        else:
+            keys = jnp.asarray(rng.integers(0, 4096, n).astype(np.int32))
+        t = Table({"k": keys, "v": vals})
+        for strat in ("sort", "partition_hash"):
+            f = jax.jit(functools.partial(
+                group_aggregate, key="k", aggs={"v": "sum"},
+                num_groups=8192, strategy=strat))
+            us = time_fn(f, t)
+            emit(f"groupby/{tag}/{strat}", us, f"{n/(us/1e6)/1e6:.1f} Mrows/s")
+
+
+def wide_payload():
+    """GFTR-style lazy per-column transform for multi-agg group-bys."""
+    n = N_BASE
+    rng = np.random.default_rng(2)
+    cols = {"k": jnp.asarray(rng.integers(0, 1024, n).astype(np.int32))}
+    for j in range(4):
+        cols[f"v{j}"] = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    t = Table(cols)
+    aggs = {f"v{j}": op for j, op in zip(range(4), ("sum", "mean", "min", "max"))}
+    for strat in ("sort", "partition_hash"):
+        f = jax.jit(functools.partial(group_aggregate, key="k", aggs=aggs,
+                                      num_groups=2048, strategy=strat))
+        us = time_fn(f, t)
+        emit(f"groupby/wide4/{strat}", us, f"{n/(us/1e6)/1e6:.1f} Mrows/s")

@@ -1,0 +1,70 @@
+"""Framework-integration benchmarks: the paper's pattern inside the ML
+system — MoE dispatch (sort/GFTR vs einsum/GFUR-analogue), the feature-join
+input pipeline, and Pallas-kernel vs XLA primitive comparisons."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as MOE
+from repro.models.params import init_from_template
+from repro.data.pipeline import (FeatureJoinConfig, assemble_batch,
+                                 history_aggregates, make_dim_tables,
+                                 make_fact_batch)
+from repro.kernels import ops as kops
+
+from .common import N_BASE, emit, time_fn
+
+
+def moe_dispatch():
+    """GFTR sort-dispatch vs dense einsum dispatch, tokens x experts sweep."""
+    d = 128
+    for T, E, k in ((4096, 8, 2), (4096, 60, 4), (16384, 8, 2)):
+        for disp in ("sort", "einsum"):
+            cfg = MoEConfig(num_experts=E, top_k=k, d_expert=256, dispatch=disp,
+                            capacity_factor=1.25)
+            p = init_from_template(MOE.moe_tmpl(d, cfg), jax.random.PRNGKey(0))
+            x = jax.random.normal(jax.random.PRNGKey(1), (1, T, d)) * 0.1
+            f = jax.jit(lambda p, x: MOE.apply_moe(p, x, cfg)[0])
+            us = time_fn(f, p, x)
+            emit(f"moe/T{T}_E{E}_k{k}/{disp}", us, f"{T/(us/1e6)/1e3:.0f} Ktok/s")
+
+
+def feature_join_pipeline():
+    """End-to-end on-device relational input pipeline (paper §1 use case)."""
+    for pat in ("gftr", "gfur"):
+        cfg = FeatureJoinConfig(algorithm="phj", pattern=pat)
+        U, I = make_dim_tables(cfg)
+        b, s = 8, 256
+        fact = make_fact_batch(cfg, b, s, 0)
+        f = jax.jit(functools.partial(assemble_batch, cfg, U, I, batch=b, seq=s))
+        us = time_fn(lambda fa: f(fa)[0]["tokens"], fact)
+        emit(f"pipeline/feature_join/{pat}", us, f"{b*s/(us/1e6)/1e3:.0f} Ktok/s")
+    cfg = FeatureJoinConfig()
+    fact = make_fact_batch(cfg, 8, 256, 0)
+    g = jax.jit(functools.partial(history_aggregates, cfg))
+    us = time_fn(g, fact)
+    emit("pipeline/history_groupby", us, "per-user label mean")
+
+
+def kernel_vs_xla():
+    """Pallas kernels (interpret mode on CPU) vs XLA primitives —
+    correctness-bearing comparison; wall times on CPU favor XLA since
+    interpret mode executes the kernel body in Python."""
+    n = N_BASE // 4
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.integers(0, 256, n).astype(np.int32))
+    us_x = time_fn(lambda x: kops.histogram(x, 256, "xla"), d)
+    emit("kernels/histogram/xla", us_x, "")
+    us_p = time_fn(lambda x: kops.histogram(x, 256, "pallas"), d)
+    emit("kernels/histogram/pallas-interpret", us_p, "validated==xla")
+
+    b = jnp.sort(jnp.asarray(rng.integers(0, 1 << 29, n).astype(np.int32)))
+    p = jnp.sort(jnp.asarray(rng.integers(0, 1 << 29, n).astype(np.int32)))
+    emit("kernels/merge_lb/xla", time_fn(lambda a, c: kops.merge_lower_bound(a, c, "xla"), b, p), "")
+    emit("kernels/merge_lb/pallas-interpret",
+         time_fn(lambda a, c: kops.merge_lower_bound(a, c, "pallas"), b, p), "validated==xla")

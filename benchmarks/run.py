@@ -1,0 +1,51 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
+runs use 2^27 rows — same code, larger constant)."""
+import os
+import sys
+import time
+
+# 8-byte key/payload experiments (paper §5.2.5) need x64 before jax init.
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import joins, groupby_bench, integration_bench
+    from .common import ROWS
+
+    sections = [
+        ("fig1", joins.fig1_time_breakdown),
+        ("table4+fig7", joins.table4_fig7_gather),
+        ("fig8/9", joins.fig8_9_narrow),
+        ("fig10", joins.fig10_wide),
+        ("fig11", joins.fig11_size_ratio),
+        ("fig12", joins.fig12_payload_cols),
+        ("fig13", joins.fig13_match_ratio),
+        ("fig14", joins.fig14_skew),
+        ("fig15", joins.fig15_dtypes),
+        ("table5", joins.table5_memory),
+        ("fig16", joins.fig16_join_sequences),
+        ("fig17", joins.fig17_tpc),
+        ("fig18", joins.fig18_planner),
+        ("groupby/cardinality", groupby_bench.cardinality_sweep),
+        ("groupby/skew", groupby_bench.skew_sweep),
+        ("groupby/wide", groupby_bench.wide_payload),
+        ("moe_dispatch", integration_bench.moe_dispatch),
+        ("feature_pipeline", integration_bench.feature_join_pipeline),
+        ("kernels", integration_bench.kernel_vs_xla),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for tag, fn in sections:
+        if only and not tag.startswith(only):
+            continue
+        print(f"# --- {tag} ---")
+        fn()
+    print(f"# total_wall_s,{time.time()-t0:.1f},{len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

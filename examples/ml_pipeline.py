@@ -1,0 +1,67 @@
+"""End-to-end driver (deliverable b): relational preprocessing ON DEVICE
+feeding LM training — the paper's §1 motivating use case.
+
+Per step: a fact table of (user, item, label) events is joined against two
+feature dimension tables with the GFTR-optimized PHJ join, per-user history
+aggregates come from the partition-hash group-by, the joined features are
+tokenized, and an xLSTM LM trains on the stream. Everything after the
+synthetic event generator runs in jit on device.
+
+    PYTHONPATH=src python examples/ml_pipeline.py --steps 200
+"""
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_reduced_config
+from repro.data.pipeline import (FeatureJoinConfig, assemble_batch,
+                                 history_aggregates, make_dim_tables,
+                                 make_fact_batch)
+from repro.models import model as M
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--pattern", default="gftr", choices=["gftr", "gfur"])
+    args = ap.parse_args(argv)
+
+    pcfg = FeatureJoinConfig(algorithm="phj", pattern=args.pattern, vocab=512)
+    U, I = make_dim_tables(pcfg)
+    mcfg = get_reduced_config("xlstm-125m").replace(vocab_size=pcfg.vocab)
+    params = M.init_params(mcfg, jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(3e-3, 10, args.steps), master_weights=False)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def pipeline_step(params, opt_state, fact):
+        batch, _joined, _cnt = assemble_batch(pcfg, U, I, fact, args.batch, args.seq)
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(M.loss_fn, mcfg), has_aux=True)(params, batch)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        fact = make_fact_batch(pcfg, args.batch, args.seq, step)
+        params, opt_state, loss = pipeline_step(params, opt_state, fact)
+        losses.append(float(loss))
+        if step % 25 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f}")
+
+    G, count = history_aggregates(pcfg, fact)
+    print(f"\njoin({args.pattern})+train: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({args.steps} steps, {time.time()-t0:.1f}s)")
+    print(f"per-user history aggregates: {int(count)} users")
+    assert losses[-1] < losses[0], "pipeline training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Serve batched requests through the continuous-batching engine:
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --requests 8
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,13 @@
+"""Train a language model (any assigned arch) with the fault-tolerant loop:
+
+    PYTHONPATH=src python examples/train_lm.py --arch olmo-1b --steps 100
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b --steps 50
+
+Uses reduced configs on CPU (--full for TPU-scale). Checkpoints to
+--ckpt-dir and resumes automatically if re-run."""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: end-to-end relational joins and
+grouped aggregations with GFTR-optimized materialization, as a composable
+JAX library (see DESIGN.md)."""
+
+from .table import Table, table_from_dict, concat_tables, KEY_SENTINEL
+from .join import join, join_sequence, by_name, ALGORITHMS, PATTERNS
+from .sort_merge import smj_join, merge_find_pk_fk, merge_find_mn
+from .hash_join import (phj_join, phj_join_checked, phj_overflowed, hash32,
+                        choose_partition_bits)
+from .nphj import nphj_join
+from .groupby import (group_aggregate, groupby_sort, groupby_partition_hash,
+                      groupby_scatter, groupby_sort_pallas)
+from .planner import JoinStats, choose_algorithm, choose_smj_pattern, PrimitiveProfile, predict_join_time
+from .memmodel import peak_memory, peak_memory_bytes, gfur_ledger, gftr_ledger
+from . import primitives
+
+__all__ = [
+    "Table", "table_from_dict", "concat_tables", "KEY_SENTINEL",
+    "join", "join_sequence", "by_name", "ALGORITHMS", "PATTERNS",
+    "smj_join", "merge_find_pk_fk", "merge_find_mn",
+    "phj_join", "phj_join_checked", "phj_overflowed", "hash32",
+    "choose_partition_bits", "nphj_join",
+    "group_aggregate", "groupby_sort", "groupby_partition_hash",
+    "groupby_scatter", "groupby_sort_pallas",
+    "JoinStats", "choose_algorithm", "choose_smj_pattern",
+    "PrimitiveProfile", "predict_join_time",
+    "peak_memory", "peak_memory_bytes", "gfur_ledger", "gftr_ledger",
+    "primitives",
+]

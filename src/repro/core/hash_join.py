@@ -1,0 +1,266 @@
+"""Partitioned hash join: PHJ-UM (GFUR, §3.2) and PHJ-OM (GFTR, §4.3).
+
+The paper's PHJ-OM redesign replaces bucket-chaining (non-deterministic,
+fragmented) with stable RADIX-PARTITION into contiguous arrays + histogram/
+prefix-sum offsets. Our TPU port is deterministic by construction
+(prefix-sum ranks, no atomics — DESIGN.md §2), so the GFTR requirement
+"partitioning (key, col_1) gives the same layout as (key, col_2)" holds
+exactly.
+
+Match finding mirrors the paper's co-partition scheme: the build-side
+partition plays the role of the shared-memory hash table (here: a fixed-
+capacity VMEM-resident block), and probe keys stream against it. The paper
+itself describes the multi-bucket case as "resembling a block nested loop
+join"; on TPU the probe is a vectorized equality over the block — the
+hash_probe Pallas kernel implements the same loop with explicit VMEM tiling.
+
+Static-shape notes: build partitions are padded to `build_block` capacity
+(contiguous + constant-time indexable — the paper's de-fragmentation
+requirement); an overflow diagnostic is returned so callers can re-run with
+more partition bits. Probe-side partitions are never padded: probe rows are
+processed in partitioned order (this is also the paper's probe-side
+sub-partitioning load-balance trick, for free).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .table import KEY_SENTINEL, Table
+from . import primitives as prim
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """Murmur3-style finalizer; avalanches all input bits into 32."""
+    if x.dtype.itemsize > 4:
+        x = (x ^ (x >> 32)).astype(jnp.uint32)
+    else:
+        x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def choose_partition_bits(n_build: int, build_block: int) -> int:
+    """Fan-out so that E[partition size] <= build_block/4 (overflow of the
+    padded block becomes negligible for hashed keys)."""
+    target = max(1, (4 * n_build) // build_block)
+    return max(1, min(20, (target - 1).bit_length()))
+
+
+def _digits(keys, p_bits, hash_keys):
+    h = hash32(keys) if hash_keys else keys.astype(jnp.uint32)
+    return (h & ((1 << p_bits) - 1)).astype(jnp.int32)
+
+
+def _chunked(f, arr_len, chunk, *arrays):
+    """Apply f to row-chunks of the arrays sequentially (bounded memory),
+    concatenating results. Pads to a chunk multiple."""
+    n_pad = -arr_len % chunk
+    padded = [jnp.pad(a, [(0, n_pad)] + [(0, 0)] * (a.ndim - 1)) for a in arrays]
+    stacked = [a.reshape((-1, chunk) + a.shape[1:]) for a in padded]
+    outs = jax.lax.map(lambda xs: f(*xs), tuple(stacked))
+    outs = jax.tree_util.tree_map(lambda o: o.reshape((-1,) + o.shape[2:])[:arr_len], outs)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Build-side padded blocks
+# ---------------------------------------------------------------------------
+def build_blocks(keys_part: jax.Array, off: jax.Array, sz: jax.Array, cap: int):
+    """Pad each contiguous partition to `cap` rows -> (P, cap) key blocks and
+    (P, cap) virtual-ID blocks (positions in the partitioned array).
+    Returns (bkeys, bvids, overflow)."""
+    P = off.shape[0]
+    i = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    idx = off[:, None].astype(jnp.int32) + i
+    valid = i < sz[:, None]
+    idx_c = jnp.clip(idx, 0, keys_part.shape[0] - 1)
+    bkeys = jnp.where(valid, jnp.take(keys_part, idx_c), KEY_SENTINEL)
+    bvids = jnp.where(valid, idx, -1)
+    overflow = jnp.max(sz) > cap
+    return bkeys, bvids, overflow
+
+
+# ---------------------------------------------------------------------------
+# Match finding
+# ---------------------------------------------------------------------------
+def probe_pk_fk(bkeys, off_r, probe_keys, probe_digits, chunk=8192):
+    """For each probe row: find its (unique) match in the build block of its
+    co-partition. Returns (vid_r, matched), both clustered in probe order."""
+
+    def body(pk, pd):
+        cand = jnp.take(bkeys, pd, axis=0)  # (chunk, capR)
+        eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
+        hit = jnp.argmax(eq, axis=1).astype(jnp.int32)
+        matched = jnp.any(eq, axis=1)
+        vid_r = jnp.take(off_r, pd).astype(jnp.int32) + hit
+        return vid_r, matched
+
+    return _chunked(body, probe_keys.shape[0], chunk, probe_keys, probe_digits)
+
+
+def probe_counts(bkeys, probe_keys, probe_digits, chunk=8192):
+    """m:n: number of build matches per probe row."""
+
+    def body(pk, pd):
+        cand = jnp.take(bkeys, pd, axis=0)
+        eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
+        return jnp.sum(eq, axis=1).astype(jnp.int32)
+
+    return _chunked(body, probe_keys.shape[0], chunk, probe_keys, probe_digits)
+
+
+def probe_kth_match(bkeys, off_r, probe_keys, probe_digits, rows, ranks, chunk=8192):
+    """m:n expansion: for output row t assigned to probe row `rows[t]`, find
+    its `ranks[t]`-th match in the co-partition block."""
+
+    def body(row, rank):
+        pk = jnp.take(probe_keys, row)
+        pd = jnp.take(probe_digits, row)
+        cand = jnp.take(bkeys, pd, axis=0)
+        eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
+        csum = jnp.cumsum(eq.astype(jnp.int32), axis=1)
+        # k-th set bit = first position where csum > k
+        pos = jnp.sum((csum <= rank[:, None]).astype(jnp.int32), axis=1)
+        pos = jnp.minimum(pos, cand.shape[1] - 1)
+        return jnp.take(off_r, pd).astype(jnp.int32) + pos
+
+    return _chunked(body, rows.shape[0], chunk, rows, ranks)
+
+
+# ---------------------------------------------------------------------------
+# Join driver
+# ---------------------------------------------------------------------------
+def phj_join(
+    R: Table,
+    S: Table,
+    *,
+    key: str = "k",
+    pattern: str = "gftr",  # "gftr" (PHJ-OM) | "gfur" (PHJ-UM)
+    out_size: int | None = None,
+    mode: str = "pk_fk",
+    build_block: int = 256,
+    partition_bits: int | None = None,
+    hash_keys: bool = True,
+    reuse_transform_perm: bool = False,
+    probe_chunk: int = 8192,
+    probe_impl: str = "xla",  # "xla" | "pallas" (co-partition probe kernel)
+    gather_impl: str = "xla",  # "xla" | "pallas" (windowed clustered gather)
+):
+    """End-to-end partitioned hash join. Returns (Table, valid_count).
+
+    Build partitions are padded to `build_block`; if any partition would
+    overflow (duplicate-heavy build keys), `phj_join_checked` re-runs with
+    more partition bits (the paper's multi-pass fan-out escalation).
+    """
+    if out_size is None:
+        out_size = S.num_rows if mode == "pk_fk" else S.num_rows * 2
+    r_pay = [n for n in R.column_names if n != key]
+    s_pay = [n for n in S.column_names if n != key]
+    p_bits = (
+        partition_bits
+        if partition_bits is not None
+        else choose_partition_bits(R.num_rows, build_block)
+    )
+    P = 1 << p_bits
+
+    dig_r = _digits(R[key], p_bits, hash_keys)
+    dig_s = _digits(S[key], p_bits, hash_keys)
+    # Stable partition permutations (multi-pass radix semantics; determinism
+    # by construction — §4.3's requirement).
+    perm_r, off_r, sz_r = prim.partition_permutation(dig_r, P)
+    perm_s, off_s, sz_s = prim.partition_permutation(dig_s, P)
+
+    kr = jnp.take(R[key], perm_r)
+    ks = jnp.take(S[key], perm_s)
+    dig_s_part = jnp.take(dig_s, perm_s)
+
+    bkeys, _, overflow = build_blocks(kr, off_r, sz_r, build_block)
+
+    if mode == "pk_fk":
+        if probe_impl == "pallas":
+            from repro.kernels import ops as _kops
+
+            vid_r, matched = _kops.hash_probe(bkeys, off_r, ks, off_s, sz_s, "pallas")
+        else:
+            vid_r, matched = probe_pk_fk(bkeys, off_r, ks, dig_s_part, probe_chunk)
+        vid_s = jnp.arange(ks.shape[0], dtype=jnp.int32)
+        (keys_o, vr, vs), count = prim.compact(
+            matched, [ks, vid_r, vid_s], out_size, fill=KEY_SENTINEL
+        )
+        valid = jnp.arange(out_size) < count
+    else:
+        counts = probe_counts(bkeys, ks, dig_s_part, probe_chunk)
+        rows, ranks, valid, total = prim.expand_offsets(counts, out_size)
+        vr = probe_kth_match(bkeys, off_r, ks, dig_s_part, rows, ranks, probe_chunk)
+        vs = rows
+        keys_o = jnp.where(valid, jnp.take(ks, vs), KEY_SENTINEL)
+        count = jnp.minimum(total, out_size)
+
+    ID_R = jnp.where(valid, vr, -1)
+    ID_S = jnp.where(valid, vs, -1)
+
+    cols = {key: keys_o}
+    if pattern == "gfur":
+        # UM: translate to physical IDs of the untransformed inputs.
+        pid_r = jnp.where(valid, jnp.take(perm_r, jnp.clip(vr, 0, R.num_rows - 1)), -1)
+        pid_s = jnp.where(valid, jnp.take(perm_s, jnp.clip(vs, 0, S.num_rows - 1)), -1)
+        for n in r_pay:
+            cols[n] = prim.gather(R[n], pid_r, fill=0)  # unclustered
+        for n in s_pay:
+            cols[n] = prim.gather(S[n], pid_s, fill=0)  # unclustered
+    elif pattern == "gftr":
+        # OM: gather from partitioned relations. Probe-side IDs are perfectly
+        # clustered; build-side IDs are clustered within partitions (§4.3).
+        if gather_impl == "pallas":
+            from repro.kernels import ops as _kops
+
+            _g = lambda src, idx: _kops.clustered_gather(src, idx, "auto")
+        else:
+            _g = lambda src, idx: prim.gather(src, idx, fill=0)
+        for n in r_pay:
+            tr_n = jnp.take(R[n], perm_r, axis=0)  # (re-)transform col n
+            cols[n] = _g(tr_n, ID_R)
+        for n in s_pay:
+            ts_n = jnp.take(S[n], perm_s, axis=0)
+            cols[n] = _g(ts_n, ID_S)
+    else:
+        raise ValueError(f"unknown pattern {pattern!r}")
+
+    del reuse_transform_perm  # GFTR here always reuses the digit layout; the
+    # faithful per-column re-partition has identical output (determinism) and
+    # is what the cost model charges for (see costmodel.py).
+    return Table(cols), count
+
+
+def phj_overflowed(R: Table, *, key: str = "k", build_block: int = 256,
+                   partition_bits: int | None = None, hash_keys: bool = True):
+    """Host-side check: would any build partition exceed the padded block?"""
+    p_bits = (partition_bits if partition_bits is not None
+              else choose_partition_bits(R.num_rows, build_block))
+    dig = _digits(R[key], p_bits, hash_keys)
+    sizes = jnp.bincount(dig, length=1 << p_bits)
+    return bool(jnp.max(sizes) > build_block), p_bits
+
+
+def phj_join_checked(R: Table, S: Table, *, key: str = "k", max_extra_bits: int = 4,
+                     build_block: int = 256, **kw):
+    """phj_join with automatic fan-out escalation on build-partition
+    overflow (deterministic: the check is a cheap histogram, the re-run uses
+    strictly more bits — the paper's multi-pass partitioning policy)."""
+    overflow, p_bits = phj_overflowed(R, key=key, build_block=build_block,
+                                      partition_bits=kw.get("partition_bits"))
+    extra = 0
+    while overflow and extra < max_extra_bits:
+        extra += 1
+        overflow, _ = phj_overflowed(R, key=key, build_block=build_block,
+                                     partition_bits=p_bits + extra)
+    kw.pop("partition_bits", None)
+    return phj_join(R, S, key=key, build_block=build_block,
+                    partition_bits=p_bits + extra, **kw)

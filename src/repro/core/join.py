@@ -1,0 +1,111 @@
+"""Unified join API + join sequences (paper §5.2.7).
+
+`join()` dispatches on (algorithm, pattern):
+    algorithm: "smj" | "phj" | "nphj"
+    pattern:   "gftr" (optimized materialization, *-OM)
+             | "gfur" (unoptimized, *-UM)
+
+`join_sequence()` reproduces the paper's N-way star-join driver: a fact table
+F(FK_1..FK_N, ID, payloads) joined against dimension tables D_i(K_i, P_i),
+fetching FK_{i+1} via the accumulated tuple IDs right before join i+1 to
+avoid materializing irrelevant columns (§5.2.7).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .table import Table
+from . import primitives as prim
+from .sort_merge import smj_join
+from .hash_join import phj_join
+from .nphj import nphj_join
+
+ALGORITHMS = ("smj", "phj", "nphj")
+PATTERNS = ("gftr", "gfur")
+
+
+def join(
+    R: Table,
+    S: Table,
+    *,
+    key: str = "k",
+    algorithm: str = "phj",
+    pattern: str = "gftr",
+    out_size: int | None = None,
+    mode: str = "pk_fk",
+    **kw,
+):
+    """Inner equi-join of R (build / PK side) and S (probe / FK side).
+
+    Returns (Table, valid_count); see DESIGN.md for the static-shape
+    contract. Shorthand names from the paper: SMJ-UM = (smj, gfur),
+    SMJ-OM = (smj, gftr), PHJ-UM = (phj, gfur), PHJ-OM = (phj, gftr).
+    """
+    if algorithm == "smj":
+        return smj_join(R, S, key=key, pattern=pattern, out_size=out_size, mode=mode, **kw)
+    if algorithm == "phj":
+        return phj_join(R, S, key=key, pattern=pattern, out_size=out_size, mode=mode, **kw)
+    if algorithm == "nphj":
+        if mode != "pk_fk":
+            raise ValueError("nphj baseline supports pk_fk only")
+        return nphj_join(R, S, key=key, out_size=out_size, **kw)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def by_name(name: str):
+    """'PHJ-OM' -> kwargs for join()."""
+    alg, mat = name.lower().split("-")
+    return dict(algorithm=alg, pattern={"om": "gftr", "um": "gfur"}[mat])
+
+
+def join_sequence(
+    fact: Table,
+    dims: list[Table],
+    *,
+    fk_cols: list[str],
+    dim_keys: list[str],
+    algorithm: str = "phj",
+    pattern: str = "gftr",
+    out_size: int | None = None,
+    restore_order: bool = False,
+    keep_ids: bool = False,
+):
+    """Sequence of N PK-FK joins (paper Fig. 16).
+
+    fact must contain fk_cols; each dims[i] has key dim_keys[i] plus payload
+    columns. Join i materializes dims[i]'s payloads into the running result;
+    FK_{i+1} is fetched lazily via the fact-table tuple IDs.
+
+    restore_order=True re-sorts the result by fact row id (canonical sample
+    order for ML pipelines — all algorithms then agree exactly);
+    keep_ids=True keeps the `_fact_id` column in the output.
+    Returns (Table, valid_count).
+    """
+    n = fact.num_rows
+    out_size = out_size or n
+    # running state: tuple IDs into the original fact table + materialized payloads
+    ids = jnp.arange(n, dtype=jnp.int32)
+    acc = Table({"_fact_id": ids})
+    count = None
+    for i, (dim, fk, dk) in enumerate(zip(dims, fk_cols, dim_keys)):
+        # fetch FK_i right before the join (avoids materializing all FKs)
+        fk_vals = prim.gather(fact[fk], acc["_fact_id"], fill=-1)
+        probe = acc.with_columns(**{dk: fk_vals})
+        joined, count = join(
+            dim, probe, key=dk, algorithm=algorithm, pattern=pattern, out_size=out_size
+        )
+        acc = joined.drop([dk]) if dk in joined.column_names else joined
+    if restore_order:
+        order_key = jnp.where(acc["_fact_id"] >= 0, acc["_fact_id"], n)
+        perm = prim.argsort_stable(order_key)
+        acc = acc.take(perm)
+    # final: materialize fact payload columns (beyond FKs) by tuple ID
+    payload = {
+        c: prim.gather(fact[c], acc["_fact_id"], fill=0)
+        for c in fact.column_names
+        if c not in fk_cols
+    }
+    result = acc.with_columns(**payload)
+    if not keep_ids:
+        result = result.drop(["_fact_id"])
+    return result, count

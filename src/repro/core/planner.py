@@ -1,0 +1,129 @@
+"""Join-algorithm planner: the paper's Fig. 18 decision trees + a
+primitive-profile cost model (§5.4: "it is crucial to profile the primitives
+beforehand ... weigh clustered GATHERs with additional transformation cost
+against unclustered GATHERs").
+
+The decision tree is the paper's summary heuristic; the cost model predicts
+per-phase byte traffic from profiled primitive throughputs and is what a
+query optimizer would consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import primitives as prim
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinStats:
+    """Workload descriptors available to an optimizer."""
+
+    n_r: int
+    n_s: int
+    r_payload_cols: int
+    s_payload_cols: int
+    match_ratio: float = 1.0  # fraction of S rows with a partner
+    zipf: float = 0.0  # FK skew
+    key_bytes: int = 4
+    payload_bytes: int = 4
+
+    @property
+    def wide(self) -> bool:
+        return self.r_payload_cols > 1 or self.s_payload_cols > 1
+
+
+def choose_algorithm(stats: JoinStats) -> tuple[str, str, str]:
+    """Fig. 18a decision tree. Returns (algorithm, pattern, rationale)."""
+    # Narrow joins: PHJ-* (transform cost identical; Fig. 9) — PHJ-UM for
+    # low match ratios, PHJ-OM otherwise (Fig. 13).
+    if not stats.wide:
+        if stats.match_ratio < 0.25:
+            return "phj", "gfur", "narrow + low match ratio -> PHJ-UM (Fig. 13)"
+        return "phj", "gftr", "narrow -> PHJ-* (Fig. 9); OM for robustness to skew (Fig. 14)"
+    # Wide joins.
+    if stats.match_ratio < 0.25:
+        return "phj", "gfur", "wide + low match ratio: materialization cheap -> PHJ-UM (Fig. 13)"
+    if stats.zipf > 1.0:
+        # PHJ-OM's RADIX-PARTITION is skew-robust; bucket-chaining (not
+        # implemented here) degrades; SMJ-UM is the runner-up (Fig. 14).
+        return "phj", "gftr", "wide + skewed FKs -> PHJ-OM (Fig. 14)"
+    if stats.key_bytes >= 8 or stats.payload_bytes >= 8:
+        # SMJ-OM loses its edge with 8-byte data (Fig. 15 / §5.3); PHJ-OM
+        # keeps it.
+        return "phj", "gftr", "8-byte data: sorting too costly for SMJ-OM -> PHJ-OM (Fig. 15)"
+    return "phj", "gftr", "wide + high match ratio -> *-OM; PHJ-OM dominates (Fig. 10)"
+
+
+def choose_smj_pattern(stats: JoinStats) -> tuple[str, str]:
+    """Fig. 18b: SMJ-OM vs SMJ-UM only."""
+    if not stats.wide:
+        return "gfur", "narrow: SMJ-OM == SMJ-UM (Fig. 9)"
+    if stats.match_ratio < 0.25:
+        return "gfur", "low match ratio (Fig. 13)"
+    if stats.key_bytes >= 8 or stats.payload_bytes >= 8:
+        return "gfur", "8-byte sorting cost kills SMJ-OM's edge (Fig. 15)"
+    if stats.zipf > 1.0:
+        return "gfur", "skew: SMJ-UM competitive via low materialization (Fig. 14)"
+    return "gftr", "wide + high match -> SMJ-OM (Fig. 10)"
+
+
+# ---------------------------------------------------------------------------
+# Primitive-profile cost model (bytes moved per phase)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PrimitiveProfile:
+    """Measured throughputs (bytes/sec) for the three primitives on the
+    target part, plus the random-access penalty of unclustered gathers
+    (paper Table 4: ~4.5 lines/load unclustered vs 1.5 clustered => ~3x
+    bytes, ~8.5x cycles)."""
+
+    # Calibrated so the model reproduces the paper's Fig. 7 A100 ratios
+    # (sort+clustered ~1.2x, partition+clustered ~1.8-2x vs unclustered)
+    # when fed v5e constants; re-profile per part (paper §5.4).
+    seq_bw: float = 819e9  # sequential HBM stream (v5e)
+    sort_pass_bw: float = 819e9  # rd+wr bytes already counted x2 per pass
+    unclustered_penalty: float = 20.0  # effective slowdown per random-gathered byte
+    clustered_penalty: float = 1.3
+
+    def sort_cost(self, n, key_b, val_b):
+        passes = prim.num_radix_passes(8 * key_b)  # 8 bits/pass over key width
+        return passes * n * (key_b + val_b) * 2 / self.sort_pass_bw
+
+    def partition_cost(self, n, key_b, val_b, total_bits):
+        passes = prim.num_radix_passes(total_bits)
+        return passes * n * (key_b + val_b) * 2 / self.sort_pass_bw
+
+    def gather_cost(self, n, val_b, clustered):
+        pen = self.clustered_penalty if clustered else self.unclustered_penalty
+        return n * val_b * pen / self.seq_bw
+
+
+def predict_join_time(stats: JoinStats, algorithm: str, pattern: str,
+                      profile: PrimitiveProfile | None = None,
+                      partition_bits: int = 16) -> dict[str, float]:
+    """Analytic per-phase time (seconds on the profiled part). Mirrors the
+    paper's §4.2 '18 sequential passes replace one random scan' arithmetic."""
+    p = profile or PrimitiveProfile()
+    kb, vb = stats.key_bytes, stats.payload_bytes
+    n_out = int(stats.n_s * stats.match_ratio)
+    t = {"transform": 0.0, "find": 0.0, "materialize": 0.0}
+
+    trans = p.sort_cost if algorithm == "smj" else (
+        lambda n, k, v: p.partition_cost(n, k, v, partition_bits)
+    )
+    if algorithm == "nphj":
+        t["find"] = (stats.n_r + stats.n_s) * kb * p.unclustered_penalty / p.seq_bw
+    else:
+        # key+first payload (gftr) or key+ID (gfur) transform for both sides
+        t["transform"] = trans(stats.n_r, kb, vb if pattern == "gftr" else 4)
+        t["transform"] += trans(stats.n_s, kb, vb if pattern == "gftr" else 4)
+        t["find"] = (stats.n_r + stats.n_s) * kb / p.seq_bw  # streaming merge/probe
+
+    clustered = pattern == "gftr" and algorithm != "nphj"
+    for ncols, n_side in ((stats.r_payload_cols, stats.n_r), (stats.s_payload_cols, stats.n_s)):
+        for i in range(ncols):
+            if pattern == "gftr" and i >= 1:
+                t["materialize"] += trans(n_side, kb, vb)  # lazy re-transform
+            t["materialize"] += p.gather_cost(n_out, vb, clustered)
+    t["total"] = sum(t.values())
+    return t

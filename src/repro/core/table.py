@@ -1,0 +1,117 @@
+"""Columnar Table abstraction.
+
+Relations are stored column-wise as equal-length device arrays, mirroring the
+paper's storage model ("relations are stored in the GPU memory as columns, and
+all columns are stored as arrays", §3). A Table is a pytree so it can flow
+through jit/scan/shard_map unchanged.
+
+Static-shape discipline: XLA requires static shapes, so data-dependent results
+(join outputs, group-by outputs) are represented as (Table-with-capacity,
+valid_count). Rows at index >= valid_count are padding and carry sentinel
+keys. This mirrors fixed-capacity serving buffers and replaces the paper's
+"allocate after counting" GPU idiom (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel used for padded / invalid key slots. Valid keys must be >= 0.
+KEY_SENTINEL = -1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """An ordered collection of named, equal-length columns."""
+
+    columns: dict[str, jax.Array]
+
+    def __post_init__(self):
+        if not self.columns:
+            raise ValueError("Table needs at least one column")
+        lengths = {k: v.shape[0] for k, v in self.columns.items()}
+        if len(set(lengths.values())) > 1:
+            raise ValueError(f"ragged columns: {lengths}")
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        obj = object.__new__(cls)
+        obj.columns = dict(zip(names, children))
+        return obj
+
+    # -- basic accessors ---------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(self.columns)
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.columns)
+
+    def nbytes(self) -> int:
+        return sum(int(v.size) * v.dtype.itemsize for v in self.columns.values())
+
+    # -- functional updates --------------------------------------------------
+    def with_columns(self, **cols: jax.Array) -> "Table":
+        new = dict(self.columns)
+        new.update(cols)
+        return Table(new)
+
+    def select(self, names) -> "Table":
+        return Table({n: self.columns[n] for n in names})
+
+    def drop(self, names) -> "Table":
+        names = set(names)
+        return Table({n: v for n, v in self.columns.items() if n not in names})
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        return Table({mapping.get(n, n): v for n, v in self.columns.items()})
+
+    def take(self, idx: jax.Array) -> "Table":
+        """Row gather: out[i] = self[idx[i]]. idx may be unclustered."""
+        return Table({n: jnp.take(v, idx, axis=0, mode="clip") for n, v in self.columns.items()})
+
+    def head(self, n: int) -> "Table":
+        return Table({k: v[:n] for k, v in self.columns.items()})
+
+    def pad_to(self, n: int, fill=0) -> "Table":
+        cur = self.num_rows
+        if cur >= n:
+            return self.head(n)
+        return Table(
+            {
+                k: jnp.concatenate([v, jnp.full((n - cur,) + v.shape[1:], fill, v.dtype)])
+                for k, v in self.columns.items()
+            }
+        )
+
+    def __repr__(self):
+        cols = ", ".join(f"{n}:{v.dtype}{list(v.shape)}" for n, v in self.columns.items())
+        return f"Table({cols})"
+
+
+def table_from_dict(d: Mapping[str, jax.Array]) -> Table:
+    return Table({k: jnp.asarray(v) for k, v in d.items()})
+
+
+def concat_tables(tables: list[Table]) -> Table:
+    names = tables[0].column_names
+    return Table({n: jnp.concatenate([t[n] for t in tables]) for n in names})

@@ -1,0 +1,121 @@
+"""Relational workload generator — the paper's §5 experimental matrix.
+
+Generates (R, S) pairs with the paper's knobs:
+  * sizes (|R|, |S|) with payload column counts per side
+  * match ratio (fraction of S rows with a partner; §5.2.3: implemented by
+    replacing a fraction of R's primary keys with out-of-domain values)
+  * foreign-key skew via Zipf factor (§5.2.4)
+  * 4-byte / 8-byte keys and payloads (§5.2.5)
+  * star schemas for join sequences (§5.2.7)
+  * TPC-H/DS-shaped extracts (Table 6: row counts, K/NK column mixes,
+    dictionary-encoded strings -> ints; scaled down by `scale` to fit CPU)
+
+Keys are 0..|R|-1 shuffled (paper §5.1), payload values are derived from the
+key so correctness checks can recompute expected outputs cheaply.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Table
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinWorkload:
+    name: str
+    n_r: int
+    n_s: int
+    r_payloads: int = 2
+    s_payloads: int = 2
+    match_ratio: float = 1.0
+    zipf: float = 0.0
+    key_dtype: str = "int32"
+    payload_dtype: str = "int32"
+    seed: int = 0
+
+
+def _payload(keys: np.ndarray, j: int, dtype) -> np.ndarray:
+    return ((keys.astype(np.int64) * (j + 3) * 2654435761) % (1 << 31)).astype(dtype)
+
+
+def generate(w: JoinWorkload) -> tuple[Table, Table]:
+    rng = np.random.default_rng(w.seed)
+    kdt = np.dtype(w.key_dtype)
+    pdt = np.dtype(w.payload_dtype)
+
+    rkeys = rng.permutation(w.n_r).astype(kdt)
+    if w.match_ratio < 1.0:
+        # replace a fraction of primary keys with non-matching values (§5.2.3)
+        n_drop = int(round((1.0 - w.match_ratio) * w.n_r))
+        drop_idx = rng.choice(w.n_r, n_drop, replace=False)
+        rkeys[drop_idx] = (np.arange(n_drop) + 2 * w.n_r + 1).astype(kdt)
+
+    if w.zipf > 0:
+        ranks = rng.zipf(max(w.zipf, 1.01), size=w.n_s).astype(np.int64)
+        skeys = ((ranks - 1) % w.n_r).astype(kdt)
+    else:
+        skeys = rng.integers(0, w.n_r, w.n_s).astype(kdt)
+
+    R = {"k": jnp.asarray(rkeys)}
+    for j in range(w.r_payloads):
+        R[f"r{j+1}"] = jnp.asarray(_payload(rkeys, j, pdt))
+    S = {"k": jnp.asarray(skeys)}
+    for j in range(w.s_payloads):
+        S[f"s{j+1}"] = jnp.asarray(_payload(skeys, 100 + j, pdt))
+    return Table(R), Table(S)
+
+
+def generate_star(n_fact: int, n_dim: int, n_joins: int, *, payloads_per_dim=1,
+                  seed=0):
+    """Fact table with N foreign keys + N dimension tables (Fig. 16)."""
+    rng = np.random.default_rng(seed)
+    fact = {"payload": jnp.arange(n_fact, dtype=jnp.int32)}
+    dims, fks, dks = [], [], []
+    for i in range(n_joins):
+        fk = rng.integers(0, n_dim, n_fact).astype(np.int32)
+        fact[f"fk{i}"] = jnp.asarray(fk)
+        dkeys = rng.permutation(n_dim).astype(np.int32)
+        cols = {f"k{i}": jnp.asarray(dkeys)}
+        for j in range(payloads_per_dim):
+            cols[f"p{i}_{j}"] = jnp.asarray(_payload(dkeys, i * 7 + j, np.int32))
+        dims.append(Table(cols))
+        fks.append(f"fk{i}")
+        dks.append(f"k{i}")
+    return Table(fact), dims, fks, dks
+
+
+# TPC-H/DS extracts (Table 6), scaled: (|R|, |S|, K/NK mix per side)
+TPC_JOINS = {
+    # id: (query, n_r, n_s, r_key_cols, r_nonkey, s_key_cols, s_nonkey, note)
+    "J1": ("TPC-H Q7", 15_000_000, 18_200_000, 1, 3, 0, 1, "PK-FK wide join"),
+    "J2": ("TPC-H Q18", 15_000_000, 60_000_000, 1, 2, 0, 1, ""),
+    "J3": ("TPC-H Q19", 2_000_000, 2_100_000, 0, 3, 0, 3, ""),
+    "J4": ("TPC-DS Q64", 1_900_000, 58_000_000, 0, 1, 3, 7, "many S payloads"),
+    "J5": ("TPC-DS Q95", 72_000_000, 72_000_000, 0, 1, 0, 1, "self narrow join, m:n"),
+}
+
+
+def generate_tpc(jid: str, *, scale: float = 1 / 64, payload_bytes: int = 8,
+                 key_bytes: int = 4, seed: int = 0):
+    """Scaled TPC-H/DS join extract. Key attrs are 4B ints; non-key attrs are
+    `payload_bytes` ints (dictionary-encoded strings per §5.3)."""
+    q, n_r, n_s, rk, rnk, sk, snk, note = TPC_JOINS[jid]
+    n_r, n_s = max(int(n_r * scale), 1024), max(int(n_s * scale), 1024)
+    kdt = "int32" if key_bytes == 4 else "int64"
+    pdt = "int32" if payload_bytes == 4 else "int64"
+    w = JoinWorkload(
+        name=jid, n_r=n_r, n_s=n_s, r_payloads=rk + rnk, s_payloads=sk + snk,
+        match_ratio=1.0, key_dtype=kdt, payload_dtype=pdt, seed=seed,
+    )
+    if jid == "J5":  # FK-FK self join: duplicate keys on the build side too
+        rng = np.random.default_rng(seed)
+        keys_r = rng.integers(0, n_r // 4, n_r).astype(kdt)
+        keys_s = rng.integers(0, n_r // 4, n_s).astype(kdt)
+        R = {"k": jnp.asarray(keys_r), "r1": jnp.asarray(_payload(keys_r, 0, np.dtype(pdt)))}
+        S = {"k": jnp.asarray(keys_s), "s1": jnp.asarray(_payload(keys_s, 9, np.dtype(pdt)))}
+        return Table(R), Table(S), "mn"
+    R, S = generate(w)
+    return R, S, "pk_fk"

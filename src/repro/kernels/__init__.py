@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated with
+interpret=True on CPU; see DESIGN.md §2 for the CUDA->TPU mapping):
+
+  histogram        - radix histogram (shared-memory atomics -> one-hot sums)
+  radix_partition  - stable partition ranks (two-pass, prefix sums)
+  merge_join       - windowed lower-bound (Merge Path -> VMEM rank count)
+  hash_probe       - co-partition probe (shared-memory bucket -> VMEM block)
+  gather           - clustered GATHER (coalescing -> VMEM window + one-hot matmul)
+  segsum           - grouped-aggregation tile partials (scatter-free MXU)
+"""
+from . import ops, ref
+from .histogram import histogram_pallas
+from .radix_partition import partition_ranks_pallas, block_histograms_pallas
+from .merge_join import lower_bound_windowed_pallas
+from .hash_probe import hash_probe_pallas, layout_probe_blocks
+from .gather import gather_windowed_pallas
+from .segsum import segsum_partials_pallas

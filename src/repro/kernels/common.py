@@ -1,0 +1,60 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Conventions (see DESIGN.md §2):
+  * 1-D relational arrays are padded and viewed as (rows, 128) so blocks are
+    lane-aligned; row-block sizes are multiples of 8 (f32 sublane).
+  * Integer payloads that flow through one-hot matmuls are split into 16-bit
+    halves so the f32 MXU accumulates them exactly (values < 2^16 are exact
+    in f32; the one-hot has a single 1 per row, so no rounding ever occurs).
+  * All kernels run under interpret=True on CPU (this container) and are
+    written with TPU BlockSpecs for the v5e target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+SUBLANES = 8
+
+
+def pad_to(x: jax.Array, multiple: int, fill=0) -> jax.Array:
+    n = x.shape[0]
+    pad = -n % multiple
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+def as_lanes(x: jax.Array, fill=0) -> jax.Array:
+    """(n,) -> (ceil(n/128), 128)."""
+    xp = pad_to(x, LANES, fill)
+    return xp.reshape(-1, LANES)
+
+
+def split_u32_hi_lo(x: jax.Array):
+    """int32/uint32 -> (hi16, lo16) as f32, exactly representable."""
+    u = x.astype(jnp.uint32)
+    hi = (u >> 16).astype(jnp.float32)
+    lo = (u & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    return hi, lo
+
+
+def combine_u32_hi_lo(hi: jax.Array, lo: jax.Array, dtype=jnp.int32):
+    u = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
+    return u.astype(dtype)
+
+
+def exact_onehot_matmul_i32(onehot_f32: jax.Array, values_i32: jax.Array) -> jax.Array:
+    """(T, W) one-hot @ (W,) int32 -> (T,) int32, exact via hi/lo split.
+
+    Turns a gather into MXU work — the TPU replacement for per-thread
+    random loads (DESIGN.md §2)."""
+    hi, lo = split_u32_hi_lo(values_i32)
+    out_hi = onehot_f32 @ hi
+    out_lo = onehot_f32 @ lo
+    return combine_u32_hi_lo(out_hi, out_lo, values_i32.dtype)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,107 @@
+"""Co-partition hash-probe kernel (PHJ match finding, §3.2/§4.3).
+
+The paper's thread block loads one build-side bucket into shared memory and
+streams probe keys against it. TPU mapping (DESIGN.md §2):
+
+  shared-memory bucket  ->  (1, capR) build block held in VMEM
+  probe stream          ->  (1, capS) probe sub-block (the paper's probe-side
+                            sub-partition decomposition, which is also its
+                            load-balancing step)
+  SIMT probe loop       ->  one (capS x capR) vectorized equality
+
+Probe rows are laid out partition-major and padded so every sub-block is
+capS-aligned and belongs to exactly one partition; a scalar-prefetched array
+maps sub-block -> partition id, which drives the build BlockSpec. The build
+partition offset (for virtual-ID construction) rides along in SMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KEY_SENTINEL = -1
+
+
+def _probe_kernel(part_ref, off_ref, probe_ref, bkeys_ref, vid_ref, hit_ref):
+    i = pl.program_id(0)
+    pk = probe_ref[0]  # (capS,)
+    bk = bkeys_ref[0]  # (capR,)
+    cap_r = bk.shape[0]
+    eq = (pk[:, None] == bk[None, :]) & (pk[:, None] != KEY_SENTINEL)
+    iota = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1)
+    hitpos = jnp.where(eq, iota, cap_r).min(axis=1)
+    matched = hitpos < cap_r
+    base = off_ref[part_ref[i]]
+    vid_ref[0, :] = jnp.where(matched, base + hitpos, -1)
+    hit_ref[0, :] = matched.astype(jnp.int32)
+
+
+def hash_probe_pallas(
+    bkeys: jax.Array,  # (P, capR) padded build blocks, KEY_SENTINEL fill
+    off_r: jax.Array,  # (P,) partition offsets in the partitioned build array
+    probe_blocks: jax.Array,  # (B, capS) partition-major padded probe keys
+    block_part: jax.Array,  # (B,) partition id per probe sub-block
+    *,
+    interpret: bool = True,
+):
+    """Returns (vid, matched): (B, capS) int32 match position in the
+    partitioned build array (or -1) and 0/1 hit flags."""
+    B, capS = probe_blocks.shape
+    P, capR = bkeys.shape
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, capS), lambda i, part, off: (i, 0)),
+            pl.BlockSpec((1, capR), lambda i, part, off: (part[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capS), lambda i, part, off: (i, 0)),
+            pl.BlockSpec((1, capS), lambda i, part, off: (i, 0)),
+        ],
+    )
+    vid, hit = pl.pallas_call(
+        _probe_kernel,
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capS), jnp.int32),
+            jax.ShapeDtypeStruct((B, capS), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_part.astype(jnp.int32), off_r.astype(jnp.int32), probe_blocks, bkeys)
+    return vid, hit
+
+
+def layout_probe_blocks(
+    keys_part: jax.Array,  # partitioned probe keys (contiguous partitions)
+    off: jax.Array,
+    sz: jax.Array,
+    cap_s: int,
+    max_blocks: int,
+):
+    """Decompose partitions into capS-aligned sub-blocks (paper's probe-side
+    sub-partitioning). Static worst case: n/capS + P blocks.
+
+    Returns (probe_blocks (B, capS), block_part (B,), src_idx (B, capS)) where
+    src_idx maps each slot back to its position in keys_part (-1 = padding).
+    """
+    P = off.shape[0]
+    n = keys_part.shape[0]
+    blocks_per = -(-sz // cap_s)  # ceil
+    boff = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(blocks_per).astype(jnp.int32)])
+    b = jnp.arange(max_blocks, dtype=jnp.int32)
+    part = jnp.clip(jnp.searchsorted(boff, b, side="right").astype(jnp.int32) - 1, 0, P - 1)
+    sub = b - boff[part]
+    valid_block = b < boff[-1]
+    j = jnp.arange(cap_s, dtype=jnp.int32)[None, :]
+    src = off[part][:, None].astype(jnp.int32) + sub[:, None] * cap_s + j
+    in_part = (sub[:, None] * cap_s + j) < sz[part][:, None]
+    src_idx = jnp.where(valid_block[:, None] & in_part, src, -1)
+    pk = jnp.where(
+        src_idx >= 0,
+        jnp.take(keys_part, jnp.clip(src_idx, 0, n - 1)),
+        KEY_SENTINEL,
+    )
+    return pk, part, src_idx

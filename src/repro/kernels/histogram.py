@@ -1,0 +1,52 @@
+"""Radix-histogram Pallas kernel.
+
+Grid: sequential row-blocks of the digit array (viewed as (rows, 128) lanes).
+Each step builds a block-local histogram by summing a one-hot expansion
+(dense VPU/MXU work — the TPU replacement for shared-memory atomics,
+DESIGN.md §2) and accumulates into the single (1, num_bins) output block,
+which stays VMEM-resident across the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANES, as_lanes, ceil_div
+
+
+def _hist_kernel(num_bins: int, x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].reshape(-1)  # (rows*128,)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], num_bins), 1)
+    oh = (x[:, None] == bins).astype(jnp.int32)
+    o_ref[...] += oh.sum(axis=0, keepdims=True)
+
+
+def histogram_pallas(
+    digits: jax.Array,
+    num_bins: int,
+    *,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Counts per digit. digits int32; out-of-range digits are ignored
+    (padding uses -1). Returns (num_bins,) int32."""
+    d2 = as_lanes(digits, fill=-1)  # (R, 128)
+    rows = d2.shape[0]
+    grid = ceil_div(rows, block_rows)
+    d2 = jnp.pad(d2, ((0, grid * block_rows - rows), (0, 0)), constant_values=-1)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, num_bins),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, num_bins), jnp.int32),
+        interpret=interpret,
+    )(d2)
+    return out[0]

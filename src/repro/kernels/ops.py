@@ -1,0 +1,197 @@
+"""Public jit'd wrappers + kernel/XLA dispatch for the Pallas kernels.
+
+Dispatch policy mirrors the paper's planner logic: the windowed (clustered)
+kernels are only profitable/correct when the gather map / merge frontier is
+clustered, so each wrapper measures the per-tile span (cheap, O(n/tile)) and
+falls back to XLA's random-access path otherwise. On this CPU container all
+kernels execute with interpret=True; on a real TPU set
+`repro.kernels.ops.INTERPRET = False`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .common import ceil_div
+from .histogram import histogram_pallas
+from .radix_partition import partition_ranks_pallas, block_histograms_pallas
+from .merge_join import lower_bound_windowed_pallas
+from .hash_probe import hash_probe_pallas, layout_probe_blocks
+from .gather import gather_windowed_pallas
+from .segsum import segsum_partials_pallas
+
+INTERPRET = True  # CPU container: interpret-mode execution of kernel bodies
+
+KEY_SENTINEL = -1
+
+
+# ---------------------------------------------------------------------------
+# histogram / partition ranks
+# ---------------------------------------------------------------------------
+def histogram(digits: jax.Array, num_bins: int, impl: str = "pallas") -> jax.Array:
+    if impl == "pallas":
+        return histogram_pallas(digits, num_bins, interpret=INTERPRET)
+    return ref.histogram(digits, num_bins)
+
+
+def partition_ranks(digits: jax.Array, num_bins: int, impl: str = "pallas"):
+    """dest position per element (stable partition)."""
+    if impl == "pallas":
+        dest, off, sz = partition_ranks_pallas(digits, num_bins, interpret=INTERPRET)
+        return dest, off, sz
+    dest = ref.partition_ranks(digits, num_bins)
+    sz = ref.histogram(digits, num_bins)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sz)[:-1].astype(jnp.int32)])
+    return dest, off, sz
+
+
+def apply_partition(dest: jax.Array, *arrays: jax.Array):
+    """Materialize the partition: invert dest (scatter of iota) and gather.
+    The kernel computes ranks; XLA moves the bytes (DESIGN.md §2)."""
+    n = dest.shape[0]
+    inv = jnp.zeros((n,), jnp.int32).at[jnp.clip(dest, 0, n - 1)].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop"
+    )
+    return tuple(jnp.take(a, inv, axis=0) for a in arrays)
+
+
+# ---------------------------------------------------------------------------
+# merge lower bound
+# ---------------------------------------------------------------------------
+def merge_lower_bound(
+    build_sorted: jax.Array,
+    probe_sorted: jax.Array,
+    impl: str = "auto",
+    *,
+    window_rows: int = 1024,
+    tile: int = 1024,
+):
+    """lower bound of each (sorted) probe key in the sorted build keys.
+
+    impl='auto' checks tile spans eagerly (concrete values required);
+    'pallas' forces the windowed kernel; 'xla' forces searchsorted."""
+    if impl == "xla":
+        return ref.lower_bound(build_sorted, probe_sorted)
+    n_p = probe_sorted.shape[0]
+    n_tiles = ceil_div(n_p, tile)
+    firsts = probe_sorted[:: tile]
+    coarse = jnp.searchsorted(build_sorted, firsts, side="left").astype(jnp.int32)
+    win_idx = coarse // window_rows
+    if impl == "auto":
+        # span check: lb range covered by each tile's 2W window?
+        lasts = probe_sorted[jnp.minimum(jnp.arange(n_tiles) * tile + tile - 1, n_p - 1)]
+        coarse_hi = jnp.searchsorted(build_sorted, lasts, side="left").astype(jnp.int32)
+        fits = bool(jnp.all(coarse_hi < (win_idx + 2) * window_rows))
+        if not fits:
+            return ref.lower_bound(build_sorted, probe_sorted)
+    return lower_bound_windowed_pallas(
+        build_sorted, probe_sorted, win_idx,
+        window_rows=window_rows, tile=tile, interpret=INTERPRET,
+    )
+
+
+# ---------------------------------------------------------------------------
+# hash probe
+# ---------------------------------------------------------------------------
+def hash_probe(
+    bkeys: jax.Array,
+    off_r: jax.Array,
+    probe_keys_part: jax.Array,
+    probe_off: jax.Array,
+    probe_sz: jax.Array,
+    impl: str = "pallas",
+):
+    """Co-partition PK-FK probe over a partitioned probe side.
+
+    Returns (vid_r, matched) aligned with probe_keys_part order."""
+    P, cap_r = bkeys.shape
+    n = probe_keys_part.shape[0]
+    if impl == "xla":
+        # reconstruct per-row partition ids from the layout
+        row = jnp.arange(n, dtype=jnp.int32)
+        part = jnp.clip(
+            jnp.searchsorted(probe_off, row, side="right").astype(jnp.int32) - 1, 0, P - 1
+        )
+        return ref.hash_probe_blocks(bkeys, off_r, probe_keys_part, part)
+    cap_s = cap_r
+    max_blocks = ceil_div(n, cap_s) + P
+    pk, part, src_idx = layout_probe_blocks(probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
+    vid, hit = hash_probe_pallas(bkeys, off_r, pk, part, interpret=INTERPRET)
+    # scatter sub-block results back to partitioned probe order
+    flat_src = src_idx.reshape(-1)
+    ok = flat_src >= 0
+    vid_out = jnp.full((n,), -1, jnp.int32).at[jnp.where(ok, flat_src, n)].set(
+        vid.reshape(-1), mode="drop"
+    )
+    hit_out = jnp.zeros((n,), jnp.int32).at[jnp.where(ok, flat_src, n)].set(
+        hit.reshape(-1), mode="drop"
+    )
+    return vid_out, hit_out.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# clustered gather
+# ---------------------------------------------------------------------------
+def clustered_gather(
+    src: jax.Array,
+    idx: jax.Array,
+    impl: str = "auto",
+    *,
+    window_rows: int = 1024,
+    tile: int = 1024,
+):
+    """GATHER with windowed-kernel dispatch. Invalid idx (<0) -> 0."""
+    safe_idx = jnp.clip(idx, 0, src.shape[0] - 1)
+    if impl == "xla":
+        out = jnp.take(src, safe_idx, axis=0)
+        return jnp.where(idx >= 0, out, 0)
+    n = idx.shape[0]
+    n_tiles = ceil_div(n, tile)
+    t0 = safe_idx[::tile]
+    win_idx = t0 // window_rows
+    if impl == "auto":
+        tile_pad = jnp.pad(safe_idx, (0, n_tiles * tile - n)).reshape(n_tiles, tile)
+        spans_ok = bool(jnp.all(tile_pad.max(1) < (win_idx + 2) * window_rows)
+                        & jnp.all(tile_pad.min(1) >= win_idx * window_rows))
+        if not spans_ok:
+            out = jnp.take(src, safe_idx, axis=0)
+            return jnp.where(idx >= 0, out, 0)
+    out = gather_windowed_pallas(
+        src, safe_idx, win_idx, window_rows=window_rows, tile=tile, interpret=INTERPRET
+    )
+    return jnp.where(idx >= 0, out, 0)
+
+
+# ---------------------------------------------------------------------------
+# grouped aggregation over sorted keys
+# ---------------------------------------------------------------------------
+def groupby_sorted_sum(
+    sorted_keys: jax.Array,
+    values: jax.Array,
+    num_groups: int,
+    impl: str = "pallas",
+    *,
+    tile: int = 256,
+):
+    """Group sums over key-sorted rows: Pallas tile partials + host combine.
+    Returns (group_keys, group_sums, count)."""
+    if impl == "pallas":
+        pk, ps, pc = segsum_partials_pallas(sorted_keys, values, tile=tile, interpret=INTERPRET)
+    else:
+        pk, ps, pc = ref.segsum_partials(sorted_keys, values, tile)
+    # combine partials: they are key-sorted except sentinel slots; re-sort.
+    sk, ss = jax.lax.sort((pk, ps), num_keys=1, is_stable=True)
+    valid = sk != KEY_SENTINEL
+    bnd = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]]) & valid
+    gid = jnp.cumsum(bnd.astype(jnp.int32)) - 1
+    n_found = gid[-1] + 1
+    gid = jnp.where(valid & (gid < num_groups), gid, num_groups)
+    keys_o = jnp.full((num_groups + 1,), KEY_SENTINEL, sorted_keys.dtype).at[gid].set(
+        jnp.where(valid, sk, KEY_SENTINEL), mode="drop"
+    )
+    sums_o = jax.ops.segment_sum(jnp.where(valid, ss, 0.0), gid, num_segments=num_groups + 1)
+    return keys_o[:num_groups], sums_o[:num_groups], jnp.minimum(n_found, num_groups)

@@ -1,0 +1,99 @@
+"""Stable radix-partition rank kernels (RADIX-PARTITION primitive, §2.3/§4.3).
+
+Two-pass structure, mirroring the paper's multi-pass partitioner but with
+prefix sums instead of atomics (deterministic by construction — the property
+PHJ-OM needs):
+
+  pass A (histogram.py): per-block digit histograms -> (num_blocks, G)
+  host:   exclusive prefix over blocks & digits -> per-block base offsets
+  pass B (this file):    per-element destination index
+            dest[i] = base[block, digit] + rank_within_block(i)
+
+The within-block stable rank is a cumsum over the one-hot digit expansion —
+dense VPU work; no scatter ever happens inside the kernel. The actual data
+movement is then a single XLA gather with the inverted permutation (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import LANES, as_lanes, ceil_div
+from .histogram import histogram_pallas
+
+
+def _block_hist_kernel(num_bins: int, x_ref, o_ref):
+    x = x_ref[...].reshape(-1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], num_bins), 1)
+    oh = (x[:, None] == bins).astype(jnp.int32)
+    o_ref[...] = oh.sum(axis=0, keepdims=True)
+
+
+def block_histograms_pallas(
+    digits: jax.Array, num_bins: int, *, block_rows: int = 8, interpret: bool = True
+) -> jax.Array:
+    """(num_blocks, num_bins) per-block histograms."""
+    d2 = as_lanes(digits, fill=-1)
+    rows = d2.shape[0]
+    grid = ceil_div(rows, block_rows)
+    d2 = jnp.pad(d2, ((0, grid * block_rows - rows), (0, 0)), constant_values=-1)
+    return pl.pallas_call(
+        functools.partial(_block_hist_kernel, num_bins),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_bins), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, num_bins), jnp.int32),
+        interpret=interpret,
+    )(d2)
+
+
+def _rank_kernel(num_bins: int, x_ref, base_ref, o_ref):
+    x = x_ref[...].reshape(-1)  # (T,)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], num_bins), 1)
+    oh = (x[:, None] == bins).astype(jnp.int32)  # (T, G)
+    excl = jnp.cumsum(oh, axis=0) - oh  # exclusive within-block rank per digit
+    # own-column selection without gather: elementwise mask + row-sum
+    rank = (excl * oh).sum(axis=1)
+    base = (base_ref[...][0][None, :] * oh).sum(axis=1)  # base[digit_i]
+    dest = jnp.where(x >= 0, base + rank, -1)
+    o_ref[...] = dest.reshape(o_ref.shape)
+
+
+def partition_ranks_pallas(
+    digits: jax.Array,
+    num_bins: int,
+    *,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Destination index per element for the stable partition.
+
+    Returns (dest, offsets, sizes): dest[i] = output position of element i;
+    offsets/sizes describe the contiguous partition layout."""
+    n = digits.shape[0]
+    bh = block_histograms_pallas(digits, num_bins, block_rows=block_rows, interpret=interpret)
+    sizes = bh.sum(axis=0)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+    # base[b, g] = offsets[g] + sum_{b' < b} bh[b', g]
+    prev = jnp.cumsum(bh, axis=0) - bh
+    base = (offsets[None, :] + prev).astype(jnp.int32)
+
+    d2 = as_lanes(digits, fill=-1)
+    rows = d2.shape[0]
+    grid = ceil_div(rows, block_rows)
+    d2 = jnp.pad(d2, ((0, grid * block_rows - rows), (0, 0)), constant_values=-1)
+    dest = pl.pallas_call(
+        functools.partial(_rank_kernel, num_bins),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_bins), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * block_rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(d2, base)
+    return dest.reshape(-1)[:n], offsets, sizes

@@ -1,0 +1,79 @@
+"""Segmented partial-aggregation kernel (grouped aggregations,
+extension-per-assigned-title; see groupby.py).
+
+Input rows are key-sorted; each grid step processes one VMEM-resident tile,
+detects run boundaries, and reduces each local run with one-hot matmuls
+(sum/count) — scatter-free MXU work, the TPU analogue of a thread block's
+shared-memory hash aggregation. Per-tile partials (at most one per distinct
+key per tile) are combined by a cheap host-side pass; heavy-hitter keys
+collapse tile-locally first, which is how skew is absorbed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import ceil_div, split_u32_hi_lo, combine_u32_hi_lo
+
+KEY_SENTINEL = -1
+
+
+def _segsum_kernel(k_ref, v_ref, pk_ref, ps_ref, pc_ref):
+    k = k_ref[0]  # (T,) sorted within tile
+    v = v_ref[0].astype(jnp.float32)
+    T = k.shape[0]
+    valid = k != KEY_SENTINEL
+    prev = jnp.concatenate([jnp.full((1,), KEY_SENTINEL, k.dtype), k[:-1]])
+    bnd = (k != prev) & valid
+    lgid = jnp.cumsum(bnd.astype(jnp.int32)) - 1
+    lgid = jnp.where(valid, lgid, T)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    oh = (lgid[:, None] == iota).astype(jnp.float32)  # (rows T, groups T)
+    ps_ref[0, :] = v @ oh
+    counts = jnp.ones((T,), jnp.float32) @ oh
+    pc_ref[0, :] = counts.astype(jnp.int32)
+    # group keys via run-head selection (single 1 per column -> exact matmul)
+    head = oh * bnd[:, None].astype(jnp.float32)
+    hi16, lo16 = split_u32_hi_lo(k)
+    pk = combine_u32_hi_lo(head.T @ hi16, head.T @ lo16, k.dtype)
+    pk_ref[0, :] = jnp.where(counts > 0, pk, KEY_SENTINEL)
+
+
+def segsum_partials_pallas(
+    sorted_keys: jax.Array,
+    values: jax.Array,
+    *,
+    tile: int = 256,
+    interpret: bool = True,
+):
+    """Per-tile (keys, sums, counts) partials over key-sorted input.
+    Matches ref.segsum_partials."""
+    n = sorted_keys.shape[0]
+    n_tiles = ceil_div(n, tile)
+    kp = jnp.concatenate(
+        [sorted_keys, jnp.full((n_tiles * tile - n,), KEY_SENTINEL, sorted_keys.dtype)]
+    ).reshape(n_tiles, tile)
+    vp = jnp.concatenate(
+        [values, jnp.zeros((n_tiles * tile - n,), values.dtype)]
+    ).reshape(n_tiles, tile)
+    pk, ps, pc = pl.pallas_call(
+        _segsum_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, tile), sorted_keys.dtype),
+            jax.ShapeDtypeStruct((n_tiles, tile), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kp, vp)
+    return pk.reshape(-1), ps.reshape(-1), pc.reshape(-1)

@@ -1,0 +1,107 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON records (baseline and optimized directories)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(f"{d}/*.json"):
+        out[Path(f).stem] = json.load(open(f))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(recs, mesh_tag: str) -> str:
+    rows = ["| arch | shape | status | live GB/dev | fits 16GB | compile s | collectives (AG/AR/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|"]
+    for tag in sorted(recs):
+        r = recs[tag]
+        if not tag.endswith(mesh_tag):
+            continue
+        arch, shape, _ = tag.rsplit("__", 2)
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | skipped | — | — | — | {r['reason'][:48]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | **FAILED** | — | — | — | {r['error'][:48]} |")
+            continue
+        c = r["collectives"]["counts"]
+        coll = "/".join(str(c.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        mb = f" (mb={r['microbatches']})" if r.get("microbatches", 1) > 1 else ""
+        rows.append(
+            f"| {arch} | {shape}{mb} | ok | {fmt_bytes(r['memory']['live_bytes_per_device'])} "
+            f"| {'yes' if r['memory']['fits_v5e_16GB'] else '**NO**'} "
+            f"| {r['compile_s']} | {coll} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | bound frac (compute/bound) | MODEL/HLO flops | coll bytes/dev GB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for tag in sorted(recs):
+        r = recs[tag]
+        if not tag.endswith("__single") or r["status"] != "ok":
+            continue
+        arch, shape, _ = tag.rsplit("__", 2)
+        t = r["roofline"]
+        a = r["analytic"]
+        coll_gb = max(r["collectives"]["bytes_trip_weighted"],
+                      a["collective_bytes_per_device"]) / 1e9
+        rows.append(
+            f"| {arch} | {shape} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant'][:-2]} "
+            f"| {t['roofline_fraction_compute']:.2f} "
+            f"| {a['useful_ratio']:.2f} | {coll_gb:.2f} |")
+    return "\n".join(rows)
+
+
+def memory_delta_table(base, final) -> str:
+    rows = ["| cell | baseline GB/dev | final GB/dev | Δ |", "|---|---|---|---|"]
+    for tag in sorted(final):
+        b, f = base.get(tag), final[tag]
+        if not (b and b.get("status") == "ok" and f.get("status") == "ok"):
+            continue
+        bg = b["memory"]["live_bytes_per_device"] / 1e9
+        fg = f["memory"]["live_bytes_per_device"] / 1e9
+        if abs(bg - fg) / max(bg, 1e-9) > 0.15:
+            rows.append(f"| {tag} | {bg:.1f} | {fg:.1f} | {100*(fg-bg)/bg:+.0f}% |")
+    return "\n".join(rows)
+
+
+def summarize(final) -> dict:
+    s = {"ok": 0, "skipped": 0, "failed": 0, "nofit": 0}
+    for r in final.values():
+        if r["status"] == "ok":
+            s["ok"] += 1
+            if not r["memory"]["fits_v5e_16GB"]:
+                s["nofit"] += 1
+        elif r["status"] == "skipped":
+            s["skipped"] += 1
+        else:
+            s["failed"] += 1
+    return s
+
+
+if __name__ == "__main__":
+    import sys
+
+    final = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    base = load(sys.argv[2] if len(sys.argv) > 2 else "experiments/dryrun_baseline")
+    print("## summary", summarize(final))
+    print("\n### single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(final, "__single"))
+    print("\n### multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(final, "__multi"))
+    print("\n### roofline (single-pod)\n")
+    print(roofline_table(final))
+    print("\n### memory deltas vs baseline\n")
+    print(memory_delta_table(base, final))

@@ -1,0 +1,182 @@
+"""Roofline analysis from the compiled dry-run artifact (EXPERIMENTS.md
+§Roofline).
+
+Three terms, per (arch x shape x mesh), in seconds:
+
+    compute    = FLOPs / (chips x 197e12)        [bf16 peak, v5e]
+    memory     = HBM bytes / (chips x 819e9)
+    collective = wire bytes / (chips x 50e9)     [per-link ICI]
+
+Sources:
+  * memory_analysis(): per-device argument/temp bytes (fits-in-HBM proof).
+  * HLO text: every all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute operand size. Ops inside while bodies are multiplied
+    by the loop trip count, recovered from the largest integer constant
+    compared in the loop condition (best-effort; cross-checked against the
+    analytic model).
+  * HLO dot ops inside the scanned body give a per-layer FLOPs cross-check;
+    totals come from the analytic model in models/flops.py because XLA's
+    cost_analysis() counts a scanned body once (verified; see §Method).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip, TPU v5e
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+HBM_CAP = 16e9  # v5e HBM per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[\w\[\]{},\s]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_static: float  # summed once
+    bytes_weighted: float  # x while-loop trip counts
+    per_op: list
+
+
+def _computation_spans(text: str):
+    """Map computation name -> (start, end) character span."""
+    spans = {}
+    for m in re.finditer(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{", text, re.M):
+        name = m.group(1).lstrip("%")
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(text) and depth:
+            if text[i] == "{":
+                depth += 1
+            elif text[i] == "}":
+                depth -= 1
+            i += 1
+        spans[name] = (start, i)
+    return spans
+
+
+def _while_trip_counts(text: str, spans):
+    """body computation name -> estimated trip count."""
+    trips = {}
+    for m in re.finditer(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", text):
+        cond, body = m.group(1), m.group(2)
+        span = spans.get(cond)
+        trip = 1
+        if span:
+            consts = [int(c) for c in re.findall(r"constant\((\d+)\)", text[span[0]:span[1]])]
+            consts = [c for c in consts if 1 < c <= 1_000_000]
+            if consts:
+                trip = max(consts)
+        trips[body] = trip
+    return trips
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    spans = _computation_spans(hlo_text)
+    trips = _while_trip_counts(hlo_text, spans)
+
+    def multiplier(pos: int) -> int:
+        mult = 1
+        for name, (s, e) in spans.items():
+            if s <= pos < e and name in trips:
+                mult *= trips[name]
+        return mult
+
+    counts: dict = {}
+    b_static = 0.0
+    b_weighted = 0.0
+    per_op = []
+    for m in _COLL_RE.finditer(hlo_text):
+        out_type, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(out_type)
+        mult = multiplier(m.start())
+        counts[kind] = counts.get(kind, 0) + 1
+        b_static += nbytes
+        b_weighted += nbytes * mult
+        per_op.append({"kind": kind, "bytes": nbytes, "trip_mult": mult})
+    return CollectiveStats(counts, b_static, b_weighted, per_op)
+
+
+def parse_dot_flops(hlo_text: str) -> dict:
+    """Best-effort FLOPs of dot ops, weighted by while trip counts.
+
+    Works on the pre-optimization (lowered) HLO where contracting dims are
+    explicit in the `dot` attributes."""
+    spans = _computation_spans(hlo_text)
+    trips = _while_trip_counts(hlo_text, spans)
+
+    def multiplier(pos: int) -> int:
+        mult = 1
+        for name, (s, e) in spans.items():
+            if s <= pos < e and name in trips:
+                mult *= trips[name]
+        return mult
+
+    total = 0.0
+    total_weighted = 0.0
+    dot_re = re.compile(
+        r"=\s*(\w+\[[\d,]*\])[^\n]*?\bdot\((?:[^)]*)\)[^\n]*?"
+        r"lhs_contracting_dims=\{([\d,]*)\}", )
+    # contraction size needs lhs shape: capture full line
+    line_re = re.compile(r"^.*\bdot\(.*$", re.M)
+    for lm in line_re.finditer(hlo_text):
+        line = lm.group(0)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        out_dt, out_dims = shapes[0]
+        out_n = 1
+        for d in out_dims.split(","):
+            if d:
+                out_n *= int(d)
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        contract = 1
+        if cm and len(shapes) >= 2:
+            lhs_dims = [int(x) for x in shapes[1][1].split(",") if x]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    contract *= lhs_dims[int(ci)]
+        fl = 2.0 * out_n * contract
+        total += fl
+        total_weighted += fl * multiplier(lm.start())
+    return {"dot_flops_static": total, "dot_flops_weighted": total_weighted}
+
+
+def roofline_terms(flops_total: float, hbm_bytes_dev: float, coll_bytes_dev: float,
+                   chips: int) -> dict:
+    compute = flops_total / (chips * PEAK_FLOPS)
+    memory = hbm_bytes_dev / HBM_BW
+    collective = coll_bytes_dev / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["roofline_fraction_compute"] = compute / bound if bound else 0.0
+    terms["step_lower_bound_s"] = bound
+    return terms

@@ -1,0 +1,65 @@
+"""Training launcher: --arch <id> --steps N [--mesh none|single|multi].
+
+CPU-scale runs use reduced configs by default (--full for the real ones —
+only sensible on a TPU slice). Wires together: config registry, sharded (or
+single-device) train step, deterministic data pipeline, fault-tolerant loop
+with checkpoint/resume, straggler logging.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, get_reduced_config, list_archs
+from repro.data.synthetic import make_batch_fn
+from repro.dist import sharding as SH
+from repro.models import model as M
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.loop import LoopConfig, train_loop
+from repro.train import step as STEP
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true", help="full config (TPU scale)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_reduced_config(args.arch)
+    if cfg.ssm is not None and args.seq % cfg.ssm.chunk:
+        args.seq = -(-args.seq // cfg.ssm.chunk) * cfg.ssm.chunk
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=10, total=args.steps),
+                master_weights=False)
+    opt_state = opt.init(params)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(M.loss_fn, cfg), has_aux=True
+        )(params, batch)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    step = jax.jit(step, donate_argnums=(0, 1))
+    data_iter = make_batch_fn(cfg.vocab_size, args.batch, args.seq,
+                              seed=args.seed, cfg=cfg)
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every)
+    params, opt_state, report = train_loop(step, params, opt_state, data_iter, loop_cfg)
+    print(f"[train] {args.arch}: {report.steps_run} steps, "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+"""Shared transformer layers: norms, RoPE, GQA/SWA/cross attention, MLPs.
+
+Functional style: parameters are plain pytrees declared by `*_tmpl` template
+functions (see params.py) and consumed by `apply_*` functions. Activation
+sharding is constrained through repro.dist.sharding.shard_act (no-op outside
+a mesh context).
+
+Attention decode uses a ring-buffer KV cache of capacity W: slot = pos % W.
+With W = max_len this is a dense cache; with W = sliding_window it is the
+O(window) cache that makes SWA archs eligible for the long_500k cell
+(DESIGN.md §5). RoPE is applied at insert time with absolute positions, so
+ring wrap-around needs no re-rotation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+from repro.dist.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_tmpl(kind: str, d: int):
+    if kind == "rmsnorm":
+        return {"scale": P((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        return {"scale": P((d,), ("embed",), "ones"), "bias": P((d,), ("embed",), "zeros")}
+    if kind == "nonparam_ln":  # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self, GQA, optional sliding window; cross)
+# ---------------------------------------------------------------------------
+def attn_tmpl(d: int, n_heads: int, n_kv: int, hd: int):
+    return {
+        "wq": P((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q: (b, sq, h, hd); k/v: (b, sk, kv, hd); mask broadcast (b, 1, sq, sk)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    q = q.reshape(b, sq, kv, n_rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q, k).astype(jnp.float32)
+    scores = shard_act(scores, ("batch", "kv_heads", None, "seq", None))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+BLOCKWISE_SEQ_THRESHOLD = 2048  # above this, use online-softmax chunking
+BLOCKWISE_KV_CHUNK = 1024
+
+
+def _blockwise_sdpa(q, k, v, positions, *, n_rep, causal, window,
+                    kv_chunk=BLOCKWISE_KV_CHUNK):
+    """Flash-style attention: scan over KV chunks with running
+    (max, denom, acc) online softmax. Peak score memory is
+    (b, heads, s_q, kv_chunk) instead of (b, heads, s_q, s_kv) — this is
+    what bounds the prefill_32k / train_4k memory term (EXPERIMENTS.md
+    §Perf iteration 1)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    sk = k.shape[1]
+    pad = -sk % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // kv_chunk
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, sq, kvh, n_rep, hd)
+    qpos = positions  # (b, sq)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp  # (b, kv_chunk, kvh, hd), chunk index
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kb).astype(jnp.float32) * scale
+        s = shard_act(s, ("batch", "kv_heads", None, "seq", None))
+        mask = kpos[None, None, None, None, :] < sk  # padding
+        if causal:
+            mask &= kpos[None, None, None, None, :] <= qpos[:, None, None, :, None]
+        if window is not None:
+            mask &= kpos[None, None, None, None, :] > qpos[:, None, None, :, None] - window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p_.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p_.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    body = jax.checkpoint(body)  # nested remat: recompute per-chunk scores
+    # in backward instead of saving (b, heads, sq, kv_chunk) probabilities
+    # per chunk (EXPERIMENTS.md §Perf iteration 3)
+    m0 = shard_act(jnp.full((b, kvh, n_rep, sq), -1e30, jnp.float32),
+                   ("batch", "kv_heads", None, "seq"))
+    l0 = shard_act(jnp.zeros((b, kvh, n_rep, sq), jnp.float32),
+                   ("batch", "kv_heads", None, "seq"))
+    a0 = shard_act(jnp.zeros((b, kvh, n_rep, sq, hd), jnp.float32),
+                   ("batch", "kv_heads", None, "seq", None))
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def apply_self_attn(p, x, *, n_kv: int, theta: float, window: int | None = None,
+                    causal: bool = True, positions=None):
+    """Training/prefill path. x: (b, s, d). Sequences past
+    BLOCKWISE_SEQ_THRESHOLD use the online-softmax chunked path."""
+    b, s, d = x.shape
+    n_heads = p["wq"].shape[1]
+    n_rep = n_heads // n_kv
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    if theta is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    if s > BLOCKWISE_SEQ_THRESHOLD:
+        out = _blockwise_sdpa(q, k, v, positions, n_rep=n_rep, causal=causal,
+                              window=window)
+    else:
+        qp = positions[:, :, None]
+        kp = positions[:, None, :]
+        mask = jnp.ones((b, s, s), bool) if not causal else (kp <= qp)
+        if window is not None:
+            mask &= kp > qp - window
+        out = _sdpa(q, k, v, mask[:, None], n_rep)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard_act(y, ("batch", "seq", "embed"))
+
+
+def apply_cross_attn(p, x, kv_src, *, n_kv: int):
+    """Cross attention: queries from x (b,s,d), keys/values from kv_src
+    (b, t, d) (encoder frames / vision patches). No RoPE, no mask."""
+    n_heads = p["wq"].shape[1]
+    n_rep = n_heads // n_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    mask = jnp.ones((x.shape[0], 1, x.shape[1], kv_src.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, n_rep)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_kv_cache(b: int, w: int, n_kv: int, hd: int, dtype):
+    return {
+        "k": jnp.zeros((b, w, n_kv, hd), dtype),
+        "v": jnp.zeros((b, w, n_kv, hd), dtype),
+    }
+
+
+def apply_self_attn_decode(p, x, cache, pos, *, n_kv: int, theta: float):
+    """Single-token decode with ring-buffer cache. x: (b, 1, d); pos is a
+    scalar int32 (slot-synchronous decode / dry-run) or an int32 (b,) vector
+    (continuous batching: every sequence at its own position).
+    Returns (y, new_cache)."""
+    b, _, d = x.shape
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    n_heads = p["wq"].shape[1]
+    n_rep = n_heads // n_kv
+    W = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    # Decode attention layout must match the cache layout, or GSPMD
+    # reshards the entire KV cache every step (a multi-GB all-gather per
+    # token — EXPERIMENTS.md §Perf cell 3). When kv_heads divides the TP
+    # axis the cache is head-sharded and head-parallel attention is free;
+    # otherwise pin everything batch-only (redundant model-axis compute is
+    # negligible at 1 token/step).
+    from repro.dist.sharding import current_ctx
+
+    ctx = current_ctx()
+    head_parallel = True
+    if ctx is not None:
+        tp = dict(ctx[0].shape).get("model", 1)
+        head_parallel = n_kv % tp == 0
+    if not head_parallel:
+        q = shard_act(q, ("batch", None, None, None))
+        k = shard_act(k, ("batch", None, None, None))
+        v = shard_act(v, ("batch", None, None, None))
+    posv = pos_vec[:, None]
+    if theta is not None:
+        q = rope(q, posv, theta)
+        k = rope(k, posv, theta)  # absolute-position RoPE at insert time
+    slot = jnp.mod(pos_vec, W)  # (b,) per-sequence ring slot
+    bidx = jnp.arange(b, dtype=jnp.int32)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0])
+    cv = cache["v"].at[bidx, slot].set(v[:, 0])
+    # slot i holds timestep t_i = pos - ((pos - i) mod W); valid iff t_i >= 0
+    i = jnp.arange(W, dtype=jnp.int32)
+    t_i = pos_vec[:, None] - jnp.mod(pos_vec[:, None] - i[None, :], W)
+    mask = (t_i >= 0)[:, None, None, :]
+    out = _sdpa(q, ck, cv, mask, n_rep)
+    if not head_parallel:
+        # keep the AV product batch-sharded too, or wo's head sharding
+        # back-propagates into the einsum and regathers the V cache
+        out = shard_act(out, ("batch", None, None, None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_tmpl(kind: str, d: int, f: int):
+    if kind == "swiglu":
+        return {
+            "wg": P((d, f), ("embed", "mlp")),
+            "wu": P((d, f), ("embed", "mlp")),
+            "wd": P((f, d), ("mlp", "embed")),
+        }
+    return {"wi": P((d, f), ("embed", "mlp")), "wd": P((f, d), ("mlp", "embed"))}
+
+
+def apply_mlp(kind: str, p, x):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return shard_act(h @ p["wd"], ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed_tmpl(v: int, d: int):
+    return {"table": P((v, d), ("vocab", "embed"), "embed", scale=0.02)}
+
+
+def head_tmpl(d: int, v: int):
+    return {"w": P((d, v), ("embed", "vocab"))}
+
+
+def sinusoidal_positions(max_len: int, d: int):
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return pe
+
+
+def sinusoidal_at(positions: "jax.Array", d: int):
+    """Sinusoidal embedding rows for arbitrary (possibly traced) positions.
+    positions: (...,) int -> (..., d) f32."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    half = ang.shape[-1]
+    out = jnp.zeros(positions.shape + (d,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    out = out.at[..., 1::2].set(jnp.cos(ang[..., : (d + 1) // 2]))
+    return out

@@ -1,0 +1,585 @@
+"""Model assembly: every assigned architecture family behind one API.
+
+    template(cfg)                      parameter template (P leaves)
+    init_params(cfg, rng, dtype)       real parameters
+    forward(cfg, params, batch)        (logits, aux_loss)         [train/prefill]
+    loss_fn(cfg, params, batch)        (loss, metrics)
+    cache_shapes(cfg, b, w, dtype)     decode-cache ShapeDtypeStructs
+    init_cache(cfg, params, b, w, batch, dtype)   real cache (cross-KV filled)
+    decode_step(cfg, params, cache, token, pos)   (logits, new_cache)
+    input_specs(cfg, shape, ...)       dry-run ShapeDtypeStructs per cell
+
+Layer stacks are scanned over stacked parameters with jax.checkpoint
+(remat) around the block body; heterogeneous stacks (xLSTM pairs, zamba2
+mamba-groups + shared attention, vision self/cross groups) scan over their
+repeat unit. Decode scans carry the per-layer cache through the same
+structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .params import P, init_from_template, stack, count_params
+
+
+# ===========================================================================
+# Templates
+# ===========================================================================
+def _attn_layer_tmpl(cfg: ArchConfig):
+    d = cfg.d_model
+    t = {
+        "ln1": L.norm_tmpl(cfg.norm, d),
+        "attn": L.attn_tmpl(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd),
+        "ln2": L.norm_tmpl(cfg.norm, d),
+    }
+    if cfg.moe is not None:
+        t["moe"] = MOE.moe_tmpl(d, cfg.moe)
+    else:
+        t["mlp"] = L.mlp_tmpl(cfg.act, d, cfg.d_ff)
+    return t
+
+
+def _cross_layer_tmpl(cfg: ArchConfig):
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_tmpl(cfg.norm, d),
+        "xattn": L.attn_tmpl(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd),
+        "gate_attn": P((1,), (None,), "zeros"),
+        "ln2": L.norm_tmpl(cfg.norm, d),
+        "mlp": L.mlp_tmpl(cfg.act, d, cfg.d_ff),
+        "gate_mlp": P((1,), (None,), "zeros"),
+    }
+
+
+def _encdec_dec_layer_tmpl(cfg: ArchConfig):
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_tmpl(cfg.norm, d),
+        "attn": L.attn_tmpl(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd),
+        "ln2": L.norm_tmpl(cfg.norm, d),
+        "xattn": L.attn_tmpl(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd),
+        "ln3": L.norm_tmpl(cfg.norm, d),
+        "mlp": L.mlp_tmpl(cfg.act, d, cfg.d_ff),
+    }
+
+
+def template(cfg: ArchConfig):
+    d, V = cfg.d_model, cfg.padded_vocab
+    t: dict[str, Any] = {"embed": L.embed_tmpl(V, d), "ln_f": L.norm_tmpl(cfg.norm, d)}
+    if not cfg.tie_embeddings:
+        t["head"] = L.head_tmpl(d, V)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        t["layers"] = stack(_attn_layer_tmpl(cfg), cfg.num_layers)
+    elif fam == "ssm" and cfg.xlstm is not None:  # xLSTM
+        n_pairs = cfg.num_layers // cfg.xlstm.slstm_every
+        pair = {"mlstm": XL.mlstm_tmpl(d, cfg.xlstm), "slstm": XL.slstm_tmpl(d, cfg.xlstm)}
+        t["pairs"] = stack(pair, n_pairs)
+    elif fam == "hybrid":  # zamba2: mamba groups + one shared attn block
+        n_groups = cfg.num_layers // cfg.shared_attn_every
+        group = stack(SSM.ssm_tmpl(d, cfg.ssm), cfg.shared_attn_every)
+        t["groups"] = stack(group, n_groups)
+        t["shared_attn"] = _attn_layer_tmpl(cfg)  # single copy, reused per group
+    elif fam == "vlm":
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        group = {
+            "self": stack(_attn_layer_tmpl(cfg), cfg.cross_attn_every - 1),
+            "cross": _cross_layer_tmpl(cfg),
+        }
+        t["groups"] = stack(group, n_groups)
+    elif fam == "audio":  # whisper backbone: enc self-attn + dec self/cross
+        enc_cfg = cfg.replace(moe=None)
+        t["enc_layers"] = stack(_attn_layer_tmpl(enc_cfg), cfg.encoder_layers)
+        t["enc_ln_f"] = L.norm_tmpl(cfg.norm, d)
+        t["dec_layers"] = stack(_encdec_dec_layer_tmpl(cfg), cfg.num_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return t
+
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.float32):
+    return init_from_template(template(cfg), rng, dtype)
+
+
+def num_params(cfg: ArchConfig) -> int:
+    return count_params(template(cfg))
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+def _dense_layer_apply(cfg: ArchConfig, p, x, *, causal=True, positions=None):
+    theta = cfg.rope_theta if cfg.family != "audio" else None
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    x = x + L.apply_self_attn(
+        p["attn"], h, n_kv=cfg.num_kv_heads, theta=theta,
+        window=cfg.sliding_window, causal=causal, positions=positions,
+    )
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    if "moe" in p:
+        y, aux = MOE.apply_moe(p["moe"], h, cfg.moe)
+        return x + y, aux
+    return x + L.apply_mlp(cfg.act, p["mlp"], h), jnp.float32(0.0)
+
+
+def _cross_layer_apply(cfg: ArchConfig, p, x, kv_src):
+    h = L.apply_norm(cfg.norm, p["ln1"], x)
+    a = L.apply_cross_attn(p["xattn"], h, kv_src, n_kv=cfg.num_kv_heads)
+    x = x + jnp.tanh(p["gate_attn"].astype(x.dtype)) * a
+    h = L.apply_norm(cfg.norm, p["ln2"], x)
+    x = x + jnp.tanh(p["gate_mlp"].astype(x.dtype)) * L.apply_mlp(cfg.act, p["mlp"], h)
+    return x
+
+
+def _scan(body, x, xs, remat=True):
+    """remat: False | True (full recompute) | "dots" (save matmul outputs —
+    trades HBM for a 4x->3x backward FLOPs multiplier; §Perf)."""
+    if remat == "dots":
+        f = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        f = jax.checkpoint(body)
+    else:
+        f = body
+
+    def wrapped(carry, inp):
+        return f(carry, inp)
+
+    return jax.lax.scan(wrapped, x, xs)
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    from repro.dist.sharding import shard_act
+
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def _logits(cfg: ArchConfig, params, x):
+    x = L.apply_norm(cfg.norm, params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    else:
+        logits = x @ params["head"]["w"]
+    # mask vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        iota = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(iota >= cfg.vocab_size, -1e30, logits)
+    from repro.dist.sharding import shard_act
+
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat=True):
+    """Returns (logits (b, s, V), aux_loss scalar)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    aux0 = jnp.float32(0.0)
+
+    if fam in ("dense", "moe"):
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _dense_layer_apply(cfg, lp, h)
+            return (h, aux + a), None
+
+        (x, aux0), _ = _scan(body, (x, aux0), params["layers"], remat)
+
+    elif fam == "ssm" and cfg.xlstm is not None:
+        # pre-norm residual around each mLSTM / sLSTM block
+        def body(h, lp):
+            hn = _rms(h)
+            h = h + XL.apply_mlstm(lp["mlstm"], hn, cfg.xlstm)
+            hn = _rms(h)
+            y, _st = XL.apply_slstm(lp["slstm"], hn, cfg.xlstm)
+            return h + y, None
+
+        x, _ = _scan(body, x, params["pairs"], remat)
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, gp):
+            def mamba_body(hh, lp):
+                return hh + SSM.apply_ssm(lp, _rms(hh), cfg.ssm), None
+
+            h, _ = jax.lax.scan(mamba_body, h, gp)
+            h, _a = _dense_layer_apply(cfg, shared, h)
+            return h, None
+
+        x, _ = _scan(group_body, x, params["groups"], remat)
+
+    elif fam == "vlm":
+        kv_src = batch["vision_emb"].astype(x.dtype)
+
+        def group_body(h, gp):
+            def self_body(hh, lp):
+                hh, _a = _dense_layer_apply(cfg, lp, hh)
+                return hh, None
+
+            h, _ = jax.lax.scan(self_body, h, gp["self"])
+            h = _cross_layer_apply(cfg, gp["cross"], h, kv_src)
+            return h, None
+
+        x, _ = _scan(group_body, x, params["groups"], remat)
+
+    elif fam == "audio":
+        enc = batch["enc_emb"].astype(x.dtype)
+        enc = enc + L.sinusoidal_positions(enc.shape[1], cfg.d_model).astype(x.dtype)
+
+        def enc_body(h, lp):
+            h, _a = _dense_layer_apply(cfg, lp, h, causal=False)
+            return h, None
+
+        enc, _ = _scan(enc_body, enc, params["enc_layers"], remat)
+        enc = L.apply_norm(cfg.norm, params["enc_ln_f"], enc)
+
+        x = x + L.sinusoidal_positions(tokens.shape[1], cfg.d_model).astype(x.dtype)
+
+        def dec_body(h, lp):
+            hn = L.apply_norm(cfg.norm, lp["ln1"], h)
+            h = h + L.apply_self_attn(
+                lp["attn"], hn, n_kv=cfg.num_kv_heads, theta=None, causal=True
+            )
+            hn = L.apply_norm(cfg.norm, lp["ln2"], h)
+            h = h + L.apply_cross_attn(lp["xattn"], hn, enc, n_kv=cfg.num_kv_heads)
+            hn = L.apply_norm(cfg.norm, lp["ln3"], h)
+            h = h + L.apply_mlp(cfg.act, lp["mlp"], hn)
+            return h, None
+
+        x, _ = _scan(dec_body, x, params["dec_layers"], remat)
+    else:
+        raise ValueError(fam)
+
+    return _logits(cfg, params, x), aux0
+
+
+def _rms(x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)).astype(x.dtype)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat=True):
+    """Next-token CE. batch['tokens']: (b, s+1)."""
+    tokens = batch["tokens"]
+    inp = dict(batch)
+    inp["tokens"] = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits, aux = forward(cfg, params, inp, remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# Decode
+# ===========================================================================
+def _cache_len(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def _cache_layout(cfg: ArchConfig, b: int, max_len: int, dtype, emit):
+    """Single source of truth for decode-cache leaves: emit(shape, dtype,
+    logical_axes) is called per leaf; used for both ShapeDtypeStructs and
+    sharding specs."""
+    d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.hd
+    W = _cache_len(cfg, max_len)
+    kvc = lambda n, w=W, extra=(): {
+        "k": emit((n,) + extra + (b, w, kv, hd),
+                  dtype, ("layers",) + (None,) * len(extra) + ("batch", None, "kv_heads", "head_dim")),
+        "v": emit((n,) + extra + (b, w, kv, hd),
+                  dtype, ("layers",) + (None,) * len(extra) + ("batch", None, "kv_heads", "head_dim")),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"kv": kvc(cfg.num_layers)}
+    if fam == "ssm" and cfg.xlstm is not None:
+        n_pairs = cfg.num_layers // cfg.xlstm.slstm_every
+        inner = int(cfg.xlstm.proj_factor_mlstm * d)
+        nh = cfg.xlstm.num_heads
+        dk = inner // nh
+        hd_s = d // nh
+        return {
+            "mlstm": {
+                "C": emit((n_pairs, b, nh, dk, dk), jnp.float32,
+                          ("layers", "batch", "heads", None, None)),
+                "n": emit((n_pairs, b, nh, dk), jnp.float32,
+                          ("layers", "batch", "heads", None)),
+                "m": emit((n_pairs, b, nh), jnp.float32, ("layers", "batch", "heads")),
+                "conv": emit((n_pairs, b, 3, inner), dtype,
+                             ("layers", "batch", None, "inner")),
+            },
+            "slstm": tuple(
+                emit((n_pairs, b, nh, hd_s), jnp.float32 if i < 3 else dtype,
+                     ("layers", "batch", "heads", None))
+                for i in range(4)
+            ),
+        }
+    if fam == "hybrid":
+        n_groups = cfg.num_layers // cfg.shared_attn_every
+        inner = cfg.ssm.expand * d
+        nheads = inner // cfg.ssm.head_dim
+        conv_ch = inner + 2 * cfg.ssm.state_dim
+        return {
+            "ssm": {
+                "conv": emit(
+                    (n_groups, cfg.shared_attn_every, b, cfg.ssm.conv_width - 1, conv_ch),
+                    dtype, ("layers", None, "batch", None, "inner")),
+                "ssm": emit(
+                    (n_groups, cfg.shared_attn_every, b, nheads, cfg.ssm.head_dim,
+                     cfg.ssm.state_dim),
+                    jnp.float32, ("layers", None, "batch", "heads", None, None)),
+            },
+            "attn_kv": kvc(n_groups),
+        }
+    if fam == "vlm":
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        return {
+            "self_kv": {
+                "k": emit((n_groups, per, b, W, kv, hd), dtype,
+                          ("layers", None, "batch", None, "kv_heads", "head_dim")),
+                "v": emit((n_groups, per, b, W, kv, hd), dtype,
+                          ("layers", None, "batch", None, "kv_heads", "head_dim")),
+            },
+            "cross_kv": {
+                "k": emit((n_groups, b, cfg.vision_tokens, kv, hd), dtype,
+                          ("layers", "batch", None, "kv_heads", "head_dim")),
+                "v": emit((n_groups, b, cfg.vision_tokens, kv, hd), dtype,
+                          ("layers", "batch", None, "kv_heads", "head_dim")),
+            },
+        }
+    if fam == "audio":
+        return {
+            "self_kv": kvc(cfg.num_layers),
+            "cross_kv": {
+                "k": emit((cfg.num_layers, b, cfg.encoder_len, kv, hd), dtype,
+                          ("layers", "batch", None, "kv_heads", "head_dim")),
+                "v": emit((cfg.num_layers, b, cfg.encoder_len, kv, hd), dtype,
+                          ("layers", "batch", None, "kv_heads", "head_dim")),
+            },
+        }
+    raise ValueError(fam)
+
+
+def cache_shapes(cfg: ArchConfig, b: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache."""
+    return _cache_layout(cfg, b, max_len, dtype,
+                         lambda shape, dt, axes: jax.ShapeDtypeStruct(shape, dt))
+
+
+class AxesLeaf:
+    """Pytree *leaf* wrapping a logical-axes tuple (plain tuples would be
+    flattened as containers and break treedef alignment with cache_shapes)."""
+
+    def __init__(self, axes):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"AxesLeaf{self.axes}"
+
+
+def cache_axes(cfg: ArchConfig, b: int, max_len: int, dtype=jnp.bfloat16):
+    """Logical-axis pytree matching cache_shapes (for sharding specs)."""
+    return _cache_layout(cfg, b, max_len, dtype,
+                         lambda shape, dt, axes: AxesLeaf(axes))
+
+
+def init_cache(cfg: ArchConfig, params, b: int, max_len: int, batch=None,
+               dtype=jnp.bfloat16):
+    """Zero cache; for cross-attention families, precomputes cross K/V from
+    the stub embeddings in `batch` (vision_emb / enc_emb)."""
+    shapes = cache_shapes(cfg, b, max_len, dtype)
+    cache = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    if cfg.family == "vlm":
+        kv_src = batch["vision_emb"].astype(dtype)
+
+        def xkv(gp):
+            k = jnp.einsum("btd,dhk->bthk", kv_src, gp["cross"]["xattn"]["wk"])
+            v = jnp.einsum("btd,dhk->bthk", kv_src, gp["cross"]["xattn"]["wv"])
+            return k, v
+
+        ks, vs = jax.vmap(xkv)(params["groups"])
+        cache["cross_kv"] = {"k": ks.astype(dtype), "v": vs.astype(dtype)}
+    if cfg.family == "audio":
+        enc = batch["enc_emb"].astype(dtype)
+        enc = enc + L.sinusoidal_positions(enc.shape[1], cfg.d_model).astype(dtype)
+
+        def enc_body(h, lp):
+            h, _ = _dense_layer_apply(cfg, lp, h, causal=False)
+            return h, None
+
+        enc, _ = jax.lax.scan(lambda h, lp: enc_body(h, lp), enc, params["enc_layers"])
+        enc = L.apply_norm(cfg.norm, params["enc_ln_f"], enc)
+
+        def xkv(lp):
+            k = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wk"])
+            v = jnp.einsum("btd,dhk->bthk", enc, lp["xattn"]["wv"])
+            return k, v
+
+        ks, vs = jax.vmap(xkv)(params["dec_layers"])
+        cache["cross_kv"] = {"k": ks.astype(dtype), "v": vs.astype(dtype)}
+    return cache
+
+
+def _attn_decode_block(cfg, lp, x, kv, pos):
+    theta = cfg.rope_theta if cfg.family != "audio" else None
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    a, kv2 = L.apply_self_attn_decode(
+        lp["attn"], h, kv, pos, n_kv=cfg.num_kv_heads, theta=theta
+    )
+    x = x + a
+    h = L.apply_norm(cfg.norm, lp["ln2"], x)
+    if "moe" in lp:
+        y, _aux = MOE.apply_moe(lp["moe"], h, cfg.moe)
+        x = x + y
+    else:
+        x = x + L.apply_mlp(cfg.act, lp["mlp"], h)
+    return x, kv2
+
+
+def _cross_decode(cfg, p_attn, x, ck, cv):
+    """Cross attention against precomputed K/V."""
+    n_heads = p_attn["wq"].shape[1]
+    n_rep = n_heads // cfg.num_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p_attn["wq"])
+    mask = jnp.ones((x.shape[0], 1, 1, ck.shape[1]), bool)
+    out = L._sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask, n_rep)
+    return jnp.einsum("bshk,hkd->bsd", out, p_attn["wo"])
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, pos):
+    """token: (b,) int32; pos: scalar int32 (slot-synchronous) or (b,) int32
+    (continuous batching, per-sequence positions).
+    Returns (logits (b, V), cache)."""
+    x = jnp.take(params["embed"]["table"], token[:, None], axis=0)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def body(h, inp):
+            lp, kv = inp
+            h, kv2 = _attn_decode_block(cfg, lp, h, kv, pos)
+            return h, kv2
+
+        x, kv2 = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        cache = {"kv": kv2}
+
+    elif fam == "ssm" and cfg.xlstm is not None:
+        def body(h, inp):
+            lp, mc, sc = inp
+            hn = _rms(h)
+            y, mc2 = XL.apply_mlstm_decode(lp["mlstm"], hn, mc, cfg.xlstm)
+            h = h + y
+            hn = _rms(h)
+            y, sc2 = XL.apply_slstm_decode(lp["slstm"], hn, cfg.xlstm, sc)
+            return h + y, (mc2, sc2)
+
+        x, (mc2, sc2) = jax.lax.scan(body, x, (params["pairs"], cache["mlstm"], cache["slstm"]))
+        cache = {"mlstm": mc2, "slstm": sc2}
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, inp):
+            gp, sc, akv = inp
+
+            def mamba_body(hh, inp2):
+                lp, c = inp2
+                y, c2 = SSM.apply_ssm_decode(lp, _rms(hh), c, cfg.ssm)
+                return hh + y, c2
+
+            h, sc2 = jax.lax.scan(mamba_body, h, (gp, sc))
+            h, akv2 = _attn_decode_block(cfg, shared, h, akv, pos)
+            return h, (sc2, akv2)
+
+        x, (sc2, akv2) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["ssm"], cache["attn_kv"])
+        )
+        cache = {"ssm": sc2, "attn_kv": akv2}
+
+    elif fam == "vlm":
+        def group_body(h, inp):
+            gp, skv, ck, cv = inp
+
+            def self_body(hh, inp2):
+                lp, kv = inp2
+                hh, kv2 = _attn_decode_block(cfg, lp, hh, kv, pos)
+                return hh, kv2
+
+            h, skv2 = jax.lax.scan(self_body, h, (gp["self"], skv))
+            cp = gp["cross"]
+            hn = L.apply_norm(cfg.norm, cp["ln1"], h)
+            a = _cross_decode(cfg, cp["xattn"], hn, ck, cv)
+            h = h + jnp.tanh(cp["gate_attn"].astype(h.dtype)) * a
+            hn = L.apply_norm(cfg.norm, cp["ln2"], h)
+            h = h + jnp.tanh(cp["gate_mlp"].astype(h.dtype)) * L.apply_mlp(cfg.act, cp["mlp"], hn)
+            return h, skv2
+
+        x, skv2 = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["self_kv"], cache["cross_kv"]["k"], cache["cross_kv"]["v"]),
+        )
+        cache = {"self_kv": skv2, "cross_kv": cache["cross_kv"]}
+
+    elif fam == "audio":
+        pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+        x = x + L.sinusoidal_at(pos_vec[:, None], cfg.d_model).astype(x.dtype)
+
+        def body(h, inp):
+            lp, kv, ck, cv = inp
+            hn = L.apply_norm(cfg.norm, lp["ln1"], h)
+            a, kv2 = L.apply_self_attn_decode(
+                lp["attn"], hn, kv, pos, n_kv=cfg.num_kv_heads, theta=None
+            )
+            h = h + a
+            hn = L.apply_norm(cfg.norm, lp["ln2"], h)
+            h = h + _cross_decode(cfg, lp["xattn"], hn, ck, cv)
+            hn = L.apply_norm(cfg.norm, lp["ln3"], h)
+            h = h + L.apply_mlp(cfg.act, lp["mlp"], hn)
+            return h, kv2
+
+        x, kv2 = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["self_kv"], cache["cross_kv"]["k"], cache["cross_kv"]["v"]),
+        )
+        cache = {"self_kv": kv2, "cross_kv": cache["cross_kv"]}
+    else:
+        raise ValueError(fam)
+
+    logits = _logits(cfg, params, x)[:, 0]
+    return logits, cache
+
+
+# ===========================================================================
+# Dry-run input specs
+# ===========================================================================
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sds = jax.ShapeDtypeStruct
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((b, s + 1) if shape.kind == "train" else (b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision_emb"] = sds((b, cfg.vision_tokens, cfg.d_model), dtype)
+        if cfg.family == "audio":
+            batch["enc_emb"] = sds((b, cfg.encoder_len, cfg.d_model), dtype)
+        return batch
+    # decode: one new token against a cache of length seq_len
+    return {
+        "token": sds((b,), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "cache": cache_shapes(cfg, b, s, dtype),
+    }

@@ -1,0 +1,223 @@
+"""Mixture-of-Experts layer with two dispatch strategies (DESIGN.md §3).
+
+Token->expert dispatch *is* the paper's relational pattern: tokens are rows,
+the routed expert id is the key, and the expert computation wants rows
+grouped (clustered) by key.
+
+  dispatch="einsum"  GFUR-analogue baseline: a dense (T, E, C) one-hot
+                     dispatch/combine einsum (Switch-Transformer style).
+                     Bytes/FLOPs scale with T*E*C — at production scale this
+                     does not even fit in HBM (see EXPERIMENTS.md), the same
+                     way unclustered materialization dominates GPU joins.
+
+  dispatch="sort"    GFTR pattern: stable radix-partition of the (token,
+                     expert) assignments by expert id (repro.core
+                     primitives), contiguous per-expert blocks, grouped
+                     matmuls, and an inverse-permutation (clustered) gather
+                     on the combine side. O(T*k*D) data movement.
+
+Both honor a static capacity C per expert (overflow dropped, standard MoE
+practice) and an auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.dist.sharding import shard_act
+from .params import P
+
+
+def moe_tmpl(d: int, cfg):
+    t = {
+        "router": P((d, cfg.num_experts), ("embed", "experts"), "small"),
+        "wg": P((cfg.num_experts, d, cfg.d_expert), ("experts", "expert_embed", "expert_mlp")),
+        "wu": P((cfg.num_experts, d, cfg.d_expert), ("experts", "expert_embed", "expert_mlp")),
+        "wd": P((cfg.num_experts, cfg.d_expert, d), ("experts", "expert_mlp", "expert_embed")),
+    }
+    if cfg.num_shared_experts:
+        t["shared"] = {
+            "wg": P((d, cfg.shared_d_ff), ("embed", "mlp")),
+            "wu": P((d, cfg.shared_d_ff), ("embed", "mlp")),
+            "wd": P((cfg.shared_d_ff, d), ("mlp", "embed")),
+        }
+    return t
+
+
+def _capacity(T: int, k: int, E: int, cf: float, multiple: int = 512) -> int:
+    c = int(T * k / E * cf) + 1
+    return max(multiple, -(-c // multiple) * multiple)
+
+
+def _route(p, x2, k: int):
+    """Returns (expert_idx (T,k), gates (T,k), aux_loss)."""
+    logits = (x2 @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E * sum_e f_e * p_e
+    E = logits.shape[-1]
+    me = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    fe = onehot.mean(axis=0)
+    aux = E * jnp.sum(fe * me)
+    return expert_idx.astype(jnp.int32), gates.astype(x2.dtype), aux
+
+
+def _expert_ffn(xin, wg, wu, wd):
+    """xin: (E, C, D) -> (E, C, D), grouped SwiGLU. No sharding constraints
+    here: this runs under vmap in the grouped path (constraints live on the
+    group dim in _dispatch_sort_grouped)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xin, wu
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _plan_sort(expert_idx, E: int, C: int):
+    """Integer dispatch plan for one token group (vmapped at scale).
+
+    Returns (blk_tok (E, C), slot_a (t*k,), keep_a (t*k,)): the padded-
+    partition layout of hash_join applied to token->expert assignments
+    (transformation phase = stable partition by expert id)."""
+    t, k = expert_idx.shape
+    n = t * k
+    eflat = expert_idx.reshape(-1)
+    tok = jnp.arange(n, dtype=jnp.int32) // k
+    perm, off, _sz = prim.partition_permutation(eflat, E)
+    sorted_e = jnp.take(eflat, perm)
+    sorted_tok = jnp.take(tok, perm)
+    pos_in_e = jnp.arange(n, dtype=jnp.int32) - jnp.take(off, sorted_e).astype(jnp.int32)
+    keep = pos_in_e < C
+    blk_tok = (
+        jnp.full((E, C), -1, jnp.int32)
+        .at[jnp.where(keep, sorted_e, E), jnp.where(keep, pos_in_e, 0)]
+        .set(sorted_tok, mode="drop")
+    )
+    inv = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+    slot = sorted_e * C + jnp.minimum(pos_in_e, C - 1)
+    slot_a = jnp.take(slot, inv)
+    keep_a = jnp.take(keep, inv)
+    return blk_tok, slot_a, keep_a
+
+
+def _gather_rows(x, idx):
+    """out[i] = x[idx[i]] with idx == -1 -> 0 (one token group)."""
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    return jnp.where((idx >= 0).reshape(idx.shape + (1,) * (x.ndim - 1)),
+                     jnp.take(x, safe, axis=0), 0)
+
+
+def _dispatch_sort(p, x2, expert_idx, gates, C: int):
+    """GFTR-pattern dispatch, single group (tests / no-mesh path)."""
+    T, D = x2.shape
+    E = p["wg"].shape[0]
+    k = expert_idx.shape[1]
+    blk_tok, slot_a, keep_a = _plan_sort(expert_idx, E, C)
+    xin = _gather_rows(x2, blk_tok.reshape(-1)).reshape(E, C, D)
+    out = _expert_ffn(xin, p["wg"], p["wu"], p["wd"])
+    ya = _gather_rows(out.reshape(E * C, D), jnp.where(keep_a, slot_a, -1))
+    y = (ya.reshape(T, k, D) * gates[..., None]).sum(axis=1)
+    return y.astype(x2.dtype)
+
+
+def _dispatch_sort_grouped(p, x2, expert_idx, gates, *, k: int, E: int,
+                           cf: float, groups: int):
+    """Hierarchical GFTR dispatch: tokens split into `groups` shard-local
+    blocks (the paper's probe-side sub-partitioning applied to MoE); every
+    tensor op is batched over the sharded group dim and pinned with an
+    explicit constraint so GSPMD never replicates token arrays
+    (EXPERIMENTS.md §Perf iteration 2)."""
+    T, D = x2.shape
+    t_loc = T // groups
+    C_loc = _capacity(t_loc, k, E, cf, multiple=128)
+    xg = shard_act(x2.reshape(groups, t_loc, D), ("tokens", None, "embed"))
+    eg = expert_idx.reshape(groups, t_loc, k)
+    blk, slot_a, keep_a = jax.vmap(lambda e: _plan_sort(e, E, C_loc))(eg)
+    xin = jax.vmap(_gather_rows)(xg, blk.reshape(groups, -1))
+    xin = shard_act(xin.reshape(groups, E, C_loc, D), ("tokens", None, None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xin, p["wu"]
+    )
+    h = shard_act(h, ("tokens", None, None, "mlp"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    out = shard_act(out, ("tokens", None, None, None))
+    ya = jax.vmap(_gather_rows)(out.reshape(groups, E * C_loc, D),
+                                jnp.where(keep_a, slot_a, -1))
+    ya = shard_act(ya, ("tokens", None, None))  # (G, t_loc*k, D)
+    gg = gates.reshape(groups, t_loc, k)
+    y = (ya.reshape(groups, t_loc, k, D) * gg[..., None]).sum(axis=2)
+    y = shard_act(y, ("tokens", None, "embed"))
+    return y.reshape(T, D).astype(x2.dtype)
+
+
+def _dispatch_einsum(p, x2, expert_idx, gates, C: int):
+    """Dense one-hot dispatch/combine (GFUR-analogue baseline)."""
+    T, D = x2.shape
+    E = p["wg"].shape[0]
+    k = expert_idx.shape[1]
+    n = T * k
+    eflat = expert_idx.reshape(-1)
+    tok = jnp.arange(n, dtype=jnp.int32) // k
+    # position of each assignment within its expert (stable order)
+    oh = jax.nn.one_hot(eflat, E, dtype=jnp.int32)  # (n, E)
+    excl = jnp.cumsum(oh, axis=0) - oh  # exclusive running count per expert
+    pos = jnp.take_along_axis(excl, eflat[:, None], axis=1)[:, 0]
+    keep = pos < C
+    disp = jnp.zeros((T, E, C), x2.dtype)
+    disp = disp.at[tok, eflat, jnp.minimum(pos, C - 1)].add(keep.astype(x2.dtype))
+    comb = jnp.zeros((T, E, C), x2.dtype)
+    comb = comb.at[tok, eflat, jnp.minimum(pos, C - 1)].add(
+        (gates.reshape(-1) * keep).astype(x2.dtype)
+    )
+    xin = jnp.einsum("tec,td->ecd", disp, x2)
+    out = _expert_ffn(xin, p["wg"], p["wu"], p["wd"])
+    y = jnp.einsum("tec,ecd->td", comb, out)
+    return y.astype(x2.dtype)
+
+
+def _num_token_groups(T: int) -> int:
+    """Shard-local group count for hierarchical dispatch: the total number
+    of shards along the 'tokens' axes (1 outside a mesh context)."""
+    from repro.dist import sharding as SH
+
+    ctx = SH.current_ctx()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    ax = rules.act.get("tokens")
+    if isinstance(ax, tuple):
+        ax = tuple(a for a in ax if a in mesh.shape)
+    g = SH._mesh_axis_size(mesh, ax)
+    return g if g > 1 and T % g == 0 and T // g >= 8 else 1
+
+
+def apply_moe(p, x, moe_cfg):
+    """x: (b, s, d). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    expert_idx, gates, aux = _route(p, x2, moe_cfg.top_k)
+    C = _capacity(b * s, moe_cfg.top_k, moe_cfg.num_experts, moe_cfg.capacity_factor)
+    if moe_cfg.dispatch == "sort":
+        groups = _num_token_groups(b * s)
+        if groups > 1:
+            fn = jax.checkpoint(functools.partial(
+                _dispatch_sort_grouped, k=moe_cfg.top_k, E=moe_cfg.num_experts,
+                cf=moe_cfg.capacity_factor, groups=groups))
+            y = fn(p, x2, expert_idx, gates)
+        else:
+            y = _dispatch_sort(p, x2, expert_idx, gates, C)
+    elif moe_cfg.dispatch == "einsum":
+        y = _dispatch_einsum(p, x2, expert_idx, gates, C)
+    else:
+        raise ValueError(moe_cfg.dispatch)
+    if moe_cfg.num_shared_experts:
+        sh = p["shared"]
+        xs2 = shard_act(x2, ("tokens", "embed"))
+        hs = jax.nn.silu(xs2 @ sh["wg"]) * (xs2 @ sh["wu"])
+        hs = shard_act(hs, ("tokens", "mlp"))
+        y = y + shard_act(hs @ sh["wd"], ("tokens", "embed"))
+    return y.reshape(b, s, d), aux * moe_cfg.router_aux_coef

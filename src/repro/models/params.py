@@ -1,0 +1,120 @@
+"""Parameter templates: one source of truth for init AND sharding.
+
+A model declares its parameters as a nested dict of `P` leaves, each carrying
+(shape, logical_axes, init). From the same template we derive:
+
+  * initialized parameter pytrees (init_from_template)
+  * PartitionSpec pytrees (specs_from_template + repro.dist.sharding rules)
+  * parameter counts / byte counts (for the roofline & memory analysis)
+
+Stacked (scanned) layers wrap a per-layer template with `stack(tmpl, L)`,
+which prepends a (L,) 'layers' axis — always unsharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf declaration."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float | None = None  # override fan-in scale
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes mismatch: {self.shape} vs {self.axes}")
+
+
+def stack(template: Any, n: int) -> Any:
+    """Prepend a scanned 'layers' dimension to every leaf."""
+
+    def _s(leaf: P) -> P:
+        return P((n,) + leaf.shape, ("layers",) + leaf.axes, leaf.init, leaf.scale)
+
+    return jax.tree_util.tree_map(_s, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def _init_leaf(leaf: P, key, dtype):
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    # fan-in scaled normal; 'embed' uses unit normal scaled by 1/sqrt(d_last)
+    if leaf.scale is not None:
+        scale = leaf.scale
+    elif leaf.init == "embed":
+        scale = 1.0
+    elif leaf.init == "small":
+        scale = 0.02
+    else:
+        fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, leaf.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_from_template(template: Any, rng: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        template, is_leaf=lambda x: isinstance(x, P)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(l, k, dtype) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_from_template(template: Any, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (for dry-run lowering without allocation)."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype),
+        template,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def specs_from_template(template: Any, rules: dict[str, str | None],
+                        mesh_shape: dict[str, int]):
+    """Map logical axes -> mesh axes with divisibility fallback (replicate
+    any dim that does not divide its mesh axis)."""
+    from jax.sharding import PartitionSpec
+
+    def _spec(leaf: P) -> PartitionSpec:
+        out, used = [], set()
+        for dim, ax in zip(leaf.shape, leaf.axes):
+            mesh_ax = rules.get(ax) if ax else None
+            if isinstance(mesh_ax, tuple):  # 2D sharding, e.g. expert FFN dims
+                axes = tuple(a for a in mesh_ax if a not in used and mesh_shape.get(a, 1) > 1)
+                # greedy fallback: drop trailing axes until the dim divides
+                while axes:
+                    size = 1
+                    for a in axes:
+                        size *= mesh_shape.get(a, 1)
+                    if dim % size == 0:
+                        break
+                    axes = axes[:-1]
+                if axes:
+                    out.append(axes if len(axes) > 1 else axes[0])
+                    used.update(axes)
+                else:
+                    out.append(None)
+                continue
+            if mesh_ax is None or mesh_ax in used or dim % mesh_shape.get(mesh_ax, 1) != 0:
+                out.append(None)
+            else:
+                out.append(mesh_ax)
+                used.add(mesh_ax)
+        return PartitionSpec(*out)
+
+    return jax.tree_util.tree_map(_spec, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def count_params(template: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(template, is_leaf=lambda x: isinstance(x, P))
+    return sum(math.prod(l.shape) for l in leaves)

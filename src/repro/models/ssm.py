@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block — chunked parallel form for train/prefill, recurrent
+state update for decode (zamba2 family).
+
+The chunked SSD algorithm splits the sequence into chunks of Q steps:
+intra-chunk contributions are a masked (decay-weighted) attention-like
+quadratic form (MXU-friendly), inter-chunk state is carried by a short scan
+over chunks. Decode keeps (conv window, SSM state) only — O(1) per token,
+which is what qualifies the family for the long_500k cell.
+
+Simplifications vs the released model (documented): single B/C group
+(ngroups=1), no dt/A/D per-group structure beyond per-head scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+from repro.dist.sharding import shard_act
+
+
+def ssm_tmpl(d: int, cfg):
+    inner = cfg.expand * d
+    nheads = inner // cfg.head_dim
+    n = cfg.state_dim
+    conv_ch = inner + 2 * n
+    return {
+        "in_proj": P((d, 2 * inner + 2 * n + nheads), ("embed", "inner")),
+        "conv_w": P((cfg.conv_width, conv_ch), ("conv", "inner")),
+        "conv_b": P((conv_ch,), ("inner",), "zeros"),
+        "A_log": P((nheads,), (None,), "zeros"),
+        "D": P((nheads,), (None,), "ones"),
+        "dt_bias": P((nheads,), (None,), "zeros"),
+        "norm_scale": P((inner,), ("inner",), "ones"),
+        "out_proj": P((inner, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (b, s, c); w: (k, c). If state (b, k-1, c)
+    is given, runs in streaming mode and returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    ys = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    y = jax.nn.silu(ys + b)
+    if state is None:
+        return y
+    return y, xp[:, -(k - 1) :, :]
+
+
+def _split(p, x, cfg, d):
+    inner = cfg.expand * d
+    n = cfg.state_dim
+    nheads = inner // cfg.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner : inner + inner + 2 * n]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt, inner, n, nheads
+
+
+def apply_ssm(p, x, cfg):
+    """Training/prefill. x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    z, xbc, dt, inner, n, nheads = _split(p, x, cfg, d)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :inner]
+    B = xbc[..., inner : inner + n]
+    C = xbc[..., inner + n :]
+    hdim = cfg.head_dim
+    Q = min(cfg.chunk, s)
+    if s % Q:
+        raise ValueError(f"seq {s} not divisible by chunk {Q}")
+    nc = s // Q
+    dt = jax.nn.softplus(dt + p["dt_bias"]).astype(jnp.float32)  # (b, s, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (h,)
+    dA = dt * A  # log-decay per step, (b, s, h)
+    u = (xs.reshape(b, s, nheads, hdim).astype(jnp.float32)) * dt[..., None]
+
+    # chunked views
+    dA_c = dA.reshape(b, nc, Q, nheads)
+    u_c = u.reshape(b, nc, Q, nheads, hdim)
+    B_c = B.reshape(b, nc, Q, n).astype(jnp.float32)
+    C_c = C.reshape(b, nc, Q, n).astype(jnp.float32)
+    L = jnp.cumsum(dA_c, axis=2)  # (b, nc, Q, h) inclusive log decay
+
+    # intra-chunk: Y[j] = sum_{i<=j} exp(L_j - L_i) (C_j . B_i) u_i
+    seg = L[:, :, :, None, :] - L[:, :, None, :, :]  # (b,nc,j,i,h)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcjn,bcin->bcji", C_c, B_c)  # (b,nc,Q,Q)
+    W = CB[..., None] * M  # (b,nc,j,i,h)
+    W = shard_act(W, ("batch", None, None, None, "heads"))
+    y_intra = jnp.einsum("bcjih,bcihp->bcjhp", W, u_c)
+    y_intra = shard_act(y_intra, ("batch", None, None, "heads", None))
+
+    # chunk-end states: S_c = sum_i exp(L_Q - L_i) u_i B_i^T  (h,p,n)
+    decay_to_end = jnp.exp(L[:, :, -1:, :] - L)  # (b,nc,Q,h)
+    S = jnp.einsum("bcih,bcihp,bcin->bchpn", decay_to_end, u_c, B_c)
+    S = shard_act(S, ("batch", None, "heads", None, None))
+
+    # inter-chunk scan: H_{c+1} = exp(L_Q^c) H_c + S_c
+    a_chunk = jnp.exp(L[:, :, -1, :])  # (b,nc,h)
+
+    def step(H, inp):
+        a, Sc = inp
+        Hn = a[:, :, None, None] * H + Sc
+        return Hn, H  # emit state at chunk *start*
+
+    H0 = jnp.zeros((b, nheads, hdim, n), jnp.float32)
+    _, H_starts = jax.lax.scan(
+        step, H0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S, 1, 0))
+    )
+    H_starts = jnp.moveaxis(H_starts, 0, 1)  # (b, nc, h, p, n)
+
+    # inter contribution: Y[j] += C_j . (exp(L_j) H_start)
+    H_starts = shard_act(H_starts, ("batch", None, "heads", None, None))
+    y_inter = jnp.einsum("bcjn,bcjh,bchpn->bcjhp", C_c, jnp.exp(L), H_starts)
+
+    y = (y_intra + y_inter).reshape(b, s, nheads, hdim)
+    xs_h = xs.reshape(b, s, nheads, hdim).astype(jnp.float32)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs_h
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    # gated RMSNorm then out projection
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    out = y @ p["out_proj"]
+    return shard_act(out, ("batch", "seq", "embed"))
+
+
+def init_ssm_cache(b: int, d: int, cfg, dtype):
+    inner = cfg.expand * d
+    n = cfg.state_dim
+    nheads = inner // cfg.head_dim
+    conv_ch = inner + 2 * n
+    return {
+        "conv": jnp.zeros((b, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((b, nheads, cfg.head_dim, n), jnp.float32),
+    }
+
+
+def apply_ssm_decode(p, x, cache, cfg):
+    """Single-token decode. x: (b, 1, d). Returns (y, new_cache)."""
+    b, _, d = x.shape
+    z, xbc, dt, inner, n, nheads = _split(p, x, cfg, d)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xs = xbc[..., :inner]
+    B = xbc[:, 0, inner : inner + n].astype(jnp.float32)  # (b, n)
+    C = xbc[:, 0, inner + n :].astype(jnp.float32)
+    hdim = cfg.head_dim
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0].astype(jnp.float32)  # (b, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)  # (b, h)
+    u = xs.reshape(b, nheads, hdim).astype(jnp.float32) * dt[..., None]
+    H = cache["ssm"] * a[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", u, B)
+    y = jnp.einsum("bhpn,bn->bhp", H, C)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs.reshape(b, nheads, hdim)
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    y = (y * p["norm_scale"]) @ p["out_proj"]
+    return y, {"conv": conv_state, "ssm": H}

@@ -1,0 +1,281 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel quadratic form for training,
+O(1) recurrent decode) and sLSTM (scalar memory, true recurrence via scan).
+
+Stabilized exponential gating follows the xLSTM paper: all gate algebra runs
+in log space with a running max stabilizer m, and the training-time parallel
+form of mLSTM is the masked quadratic
+
+    D[t,i] = F_t - F_i + ipre_i   (i <= t),  F = cumsum(log sigmoid(fpre))
+    h_t    = sum_i exp(D-m_t) (q_t.k_i) v_i / max(|sum_i exp(D-m_t) q.k|, e^{-m_t})
+
+which matches the decode recurrence exactly (verified by parity tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import P
+from repro.dist.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_tmpl(d: int, cfg):
+    inner = int(cfg.proj_factor_mlstm * d)
+    nh = cfg.num_heads
+    dk = inner // nh
+    return {
+        "up": P((d, 2 * inner), ("embed", "inner")),
+        "conv_w": P((4, inner), ("conv", "inner")),
+        "conv_b": P((inner,), ("inner",), "zeros"),
+        "wq": P((inner, nh, dk), ("inner", "heads", "head_dim")),
+        "wk": P((inner, nh, dk), ("inner", "heads", "head_dim")),
+        "wv": P((inner, nh, dk), ("inner", "heads", "head_dim")),
+        "wgate": P((inner, nh, 2), ("inner", "heads", None), "small"),
+        "gate_b": P((nh, 2), ("heads", None), "zeros"),
+        "norm_scale": P((inner,), ("inner",), "ones"),
+        "down": P((inner, d), ("inner", "embed")),
+    }
+
+
+def _conv_silu(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    y = jax.nn.silu(y + b)
+    return (y, xp[:, -(k - 1) :, :]) if state is not None else y
+
+
+def _mlstm_qkvg(p, x, cfg, d, conv_state=None):
+    inner = int(cfg.proj_factor_mlstm * d)
+    nh = cfg.num_heads
+    dk = inner // nh
+    up = x @ p["up"]
+    xin, z = up[..., :inner], up[..., inner:]
+    if conv_state is None:
+        xc = _conv_silu(xin, p["conv_w"], p["conv_b"])
+        new_state = None
+    else:
+        xc, new_state = _conv_silu(xin, p["conv_w"], p["conv_b"], conv_state)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"]) / jnp.sqrt(dk).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"])
+    g = jnp.einsum("bsd,dhg->bshg", xc, p["wgate"]).astype(jnp.float32) + p["gate_b"].astype(jnp.float32)
+    ipre, fpre = g[..., 0], g[..., 1]
+    return q, k, v, ipre, fpre, z, new_state, inner, nh, dk
+
+
+MLSTM_CHUNK = 256  # chunked path kicks in above this sequence length
+
+
+def apply_mlstm(p, x, cfg):
+    """Training/prefill. Quadratic parallel form for short sequences; the
+    chunked form (intra-chunk quadratic + inter-chunk (C, n, m) carry — same
+    structure as SSD) for long ones, bounding score memory at
+    (b, Q, Q, h) per chunk (EXPERIMENTS.md §Perf iteration 1)."""
+    if x.shape[1] > MLSTM_CHUNK:
+        return _apply_mlstm_chunked(p, x, cfg, MLSTM_CHUNK)
+    return _apply_mlstm_quadratic(p, x, cfg)
+
+
+def _apply_mlstm_quadratic(p, x, cfg):
+    b, s, d = x.shape
+    q, k, v, ipre, fpre, z, _, inner, nh, dk = _mlstm_qkvg(p, x, cfg, d)
+    logf = jax.nn.log_sigmoid(fpre)  # (b, s, h)
+    F = jnp.cumsum(logf, axis=1)
+    Dm = F[:, :, None, :] - F[:, None, :, :] + ipre[:, None, :, :]  # (b, t, i, h)
+    tri = jnp.tril(jnp.ones((s, s), bool))[None, :, :, None]
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=2)  # (b, t, h)
+    w = jnp.exp(Dm - m[:, :, None, :])  # (b, t, i, h)
+    qk = jnp.einsum("bthk,bihk->btih", q.astype(jnp.float32), k.astype(jnp.float32))
+    S = w * qk
+    denom = jnp.maximum(jnp.abs(S.sum(axis=2)), jnp.exp(-m))  # (b, t, h)
+    hout = jnp.einsum("btih,bihk->bthk", S, v.astype(jnp.float32)) / denom[..., None]
+    hout = hout.reshape(b, s, inner).astype(x.dtype)
+    hf = hout.astype(jnp.float32)
+    hout = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    hout = hout * p["norm_scale"] * jax.nn.silu(z)
+    return shard_act(hout @ p["down"], ("batch", "seq", "embed"))
+
+
+def _apply_mlstm_chunked(p, x, cfg, Q: int):
+    """Chunked parallel mLSTM. Derivation mirrors the decode recurrence:
+    within chunk c, D[j,i] = F_j - F_i + ipre_i; the inter-chunk carry is the
+    stabilized (C, n, m) state; m_j = max(intra max, F_j + m_prev)."""
+    b, s, d = x.shape
+    q, k, v, ipre, fpre, z, _, inner, nh, dk = _mlstm_qkvg(p, x, cfg, d)
+    if s % Q:
+        pad = Q - s % Q
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        ipre = jnp.pad(ipre, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fpre = jnp.pad(fpre, ((0, 0), (0, pad), (0, 0)))
+    sp = q.shape[1]
+    nc = sp // Q
+    qc = q.reshape(b, nc, Q, nh, dk).astype(jnp.float32)
+    kc = k.reshape(b, nc, Q, nh, dk).astype(jnp.float32)
+    vc = v.reshape(b, nc, Q, nh, dk).astype(jnp.float32)
+    ic = ipre.reshape(b, nc, Q, nh)
+    logf = jax.nn.log_sigmoid(fpre).reshape(b, nc, Q, nh)
+    F = jnp.cumsum(logf, axis=2)  # in-chunk inclusive log decay
+
+    # intra-chunk stabilizer/base quantities
+    Dm = F[:, :, :, None, :] - F[:, :, None, :, :] + ic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Dm = jnp.where(tri, Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=3)  # (b, nc, Q, h)
+
+    def chunk_body(carry, inp):
+        C_p, n_p, m_p = carry  # (b,h,dk,dk), (b,h,dk), (b,h)
+        qj, kj, vj, Fj, Dmj, m_in, icj = inp
+        # stabilizer: intra vs carry path
+        m_j = jnp.maximum(m_in, Fj + m_p[:, None, :])  # (b, Q, h)
+        w = jnp.exp(Dmj - m_j[:, :, None, :])  # (b, j, i, h)
+        qk = jnp.einsum("bjhk,bihk->bjih", qj, kj)
+        Sw = w * qk
+        num = jnp.einsum("bjih,bihk->bjhk", Sw, vj)
+        den = Sw.sum(axis=2)  # (b, j, h)
+        carry_scale = jnp.exp(Fj + m_p[:, None, :] - m_j)  # (b, Q, h)
+        num = num + carry_scale[..., None] * jnp.einsum("bjhk,bhkv->bjhv", qj, C_p)
+        den = den + carry_scale * jnp.einsum("bjhk,bhk->bjh", qj, n_p)
+        h_j = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # carry update to end of chunk
+        FQ = Fj[:, -1:, :]  # (b,1,h)
+        m_end_intra = jnp.max(FQ - Fj + icj, axis=1)  # (b, h)
+        m_new = jnp.maximum(FQ[:, 0] + m_p, m_end_intra)
+        wi = jnp.exp(FQ - Fj + icj - m_new[:, None, :])  # (b, Q, h)
+        C_new = jnp.exp(FQ[:, 0] + m_p - m_new)[:, :, None, None] * C_p + jnp.einsum(
+            "bih,bihk,bihv->bhkv", wi, kj, vj
+        )
+        n_new = jnp.exp(FQ[:, 0] + m_p - m_new)[:, :, None] * n_p + jnp.einsum(
+            "bih,bihk->bhk", wi, kj
+        )
+        return (C_new, n_new, m_new), h_j
+
+    C0 = jnp.zeros((b, nh, dk, dk), jnp.float32)
+    n0 = jnp.zeros((b, nh, dk), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (qc, kc, vc, F, Dm, m_intra, ic)
+    )
+    _, hs = jax.lax.scan(chunk_body, (C0, n0, m0), xs)
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, sp, inner)[:, :s].astype(x.dtype)
+    hf = hout.astype(jnp.float32)
+    hout = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    hout = hout * p["norm_scale"] * jax.nn.silu(z[:, :s] if z.shape[1] != s else z)
+    return shard_act(hout @ p["down"], ("batch", "seq", "embed"))
+
+
+def init_mlstm_cache(b: int, d: int, cfg, dtype):
+    inner = int(cfg.proj_factor_mlstm * d)
+    nh = cfg.num_heads
+    dk = inner // nh
+    return {
+        "C": jnp.zeros((b, nh, dk, dk), jnp.float32),
+        "n": jnp.zeros((b, nh, dk), jnp.float32),
+        "m": jnp.full((b, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((b, 3, inner), dtype),
+    }
+
+
+def apply_mlstm_decode(p, x, cache, cfg):
+    b, _, d = x.shape
+    q, k, v, ipre, fpre, z, conv_state, inner, nh, dk = _mlstm_qkvg(
+        p, x, cfg, d, cache["conv"]
+    )
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (b, h, dk)
+    ipre, fpre = ipre[:, 0], fpre[:, 0]  # (b, h)
+    logf = jax.nn.log_sigmoid(fpre)
+    m_new = jnp.maximum(logf + cache["m"], ipre)
+    fs = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(ipre - m_new)[..., None]
+    C = fs[..., None] * cache["C"] + is_[..., None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = fs * cache["n"] + is_ * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    hout = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    hf = hout.astype(jnp.float32)
+    hout = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    hout = hout * p["norm_scale"] * jax.nn.silu(z)
+    y = hout @ p["down"]
+    return y, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_tmpl(d: int, cfg):
+    nh = cfg.num_heads
+    hd = d // nh
+    f = int(cfg.proj_factor_slstm * d)
+    return {
+        "W": P((d, nh, hd, 4), ("embed", "heads", "head_dim", None)),
+        "R": P((nh, hd, hd, 4), ("heads", "head_dim", None, None), "small"),
+        "b": P((nh, hd, 4), ("heads", "head_dim", None), "zeros"),
+        "out_norm": P((d,), ("embed",), "ones"),
+        "out_proj": P((d, d), ("embed", "embed")),
+        "mlp_wi": P((d, f), ("embed", "mlp")),
+        "mlp_wd": P((f, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(p, xt, state):
+    """xt: (b, nh, hd, 4) pre-activations from input; state (c, n, m, h)."""
+    c, n, m, h = state
+    pre = xt + jnp.einsum("bhd,hdkf->bhkf", h, p["R"]) + p["b"]
+    zt = jnp.tanh(pre[..., 0])
+    it = pre[..., 1].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(pre[..., 2].astype(jnp.float32))
+    ot = jax.nn.sigmoid(pre[..., 3])
+    m_new = jnp.maximum(logf + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * zt.astype(jnp.float32)
+    n_new = f_s * n + i_s
+    h_new = (ot.astype(jnp.float32) * c_new / jnp.maximum(n_new, 1e-6)).astype(zt.dtype)
+    return c_new, n_new, m_new, h_new
+
+
+def init_slstm_state(b: int, d: int, cfg, dtype):
+    nh = cfg.num_heads
+    hd = d // nh
+    return (
+        jnp.zeros((b, nh, hd), jnp.float32),
+        jnp.zeros((b, nh, hd), jnp.float32),
+        jnp.full((b, nh, hd), -1e30, jnp.float32),
+        jnp.zeros((b, nh, hd), dtype),
+    )
+
+
+def apply_slstm(p, x, cfg, state=None):
+    """x: (b, s, d). Scan over time (true recurrence). Returns (y, state)."""
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    if state is None:
+        state = init_slstm_state(b, d, cfg, x.dtype)
+    xw = jnp.einsum("bsd,dhkf->bshkf", x, p["W"])  # f = 4 gates
+
+    def step(st, xt):
+        st2 = _slstm_cell(p, xt, st)
+        return st2, st2[3]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    hf = h.astype(jnp.float32)
+    h = (hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-5)).astype(x.dtype)
+    h = (h * p["out_norm"]) @ p["out_proj"]
+    h = h + jax.nn.gelu(h @ p["mlp_wi"]) @ p["mlp_wd"]
+    return shard_act(h, ("batch", "seq", "embed")), state
+
+
+def apply_slstm_decode(p, x, cfg, state):
+    y, state = apply_slstm(p, x, cfg, state)
+    return y, state

@@ -1,0 +1,123 @@
+"""Batched serving engine: continuous batching over fixed-capacity slots.
+
+vLLM-style slot management adapted to XLA static shapes (the same
+capacity+count discipline as the relational layer): the engine owns a
+(max_batch,) slot array; requests are admitted into free slots, every
+decode_step advances all live slots one token at their OWN position
+(vector `pos` — per-slot ring-buffer offsets), finished slots are freed and
+immediately refillable. Admission resets the freed slot's cache rows to
+their pristine values so no state leaks between requests (verified by
+tests/test_data_and_serve.py::test_slot_reuse_no_leak). The KV/SSM cache is
+allocated once at capacity; cross-KV (vision/audio stubs) is per-slot
+static.
+
+Single-host reference implementation with the same step function the
+sharded serve path uses (launch/serve.py builds it with a mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+def _reset_slot(cache, pristine, axes, slot: int):
+    """Copy slot `slot`'s rows from the pristine cache (per-leaf batch axis
+    located via the cache's logical-axes tree)."""
+
+    def one(c, p, ax):
+        try:
+            b_axis = ax.axes.index("batch")
+        except ValueError:
+            return c
+        idx = (slice(None),) * b_axis + (slot,)
+        return c.at[idx].set(p[idx])
+
+    return jax.tree_util.tree_map(one, cache, pristine, axes)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 max_len: int = 256, eos_id: int = 2, batch_stub=None,
+                 dtype=jnp.float32, step_fn: Callable | None = None):
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.max_len, self.eos_id = max_batch, max_len, eos_id
+        stub = batch_stub or {}
+        self.cache = M.init_cache(cfg, params, max_batch, max_len, stub, dtype)
+        self._pristine = jax.tree_util.tree_map(jnp.copy, self.cache)
+        self._cache_axes = M.cache_axes(cfg, max_batch, max_len, dtype)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)  # per-slot position
+        self.tokens = np.zeros(max_batch, np.int32)
+        self.queue: list[Request] = []
+        self._step = step_fn or jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
+        )
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                # fresh slot: position 0, pristine cache rows (no leakage
+                # from the previous occupant)
+                self.slot_pos[i] = 0
+                self.cache = _reset_slot(self.cache, self._pristine,
+                                         self._cache_axes, i)
+                # prefill-by-decode: feed prompt tokens one per engine step
+                req._prompt_cursor = 1
+                self.tokens[i] = req.prompt[0]
+
+    # -- one engine tick ------------------------------------------------------
+    def step(self):
+        self._admit()
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return False
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.slot_pos),
+        )
+        logits = np.asarray(logits)
+        for i in live:
+            self.slot_pos[i] += 1
+            req = self.slot_req[i]
+            if req._prompt_cursor < len(req.prompt):  # still prefilling
+                self.tokens[i] = req.prompt[req._prompt_cursor]
+                req._prompt_cursor += 1
+                continue
+            nxt = int(np.argmax(logits[i]))
+            req.out.append(nxt)
+            self.tokens[i] = nxt
+            if nxt == self.eos_id or len(req.out) >= req.max_tokens \
+               or int(self.slot_pos[i]) >= self.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None  # free slot for continuous batching
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+            if not self.step():
+                break
+            ticks += 1
+        return ticks

@@ -1,0 +1,173 @@
+"""Sharded train/serve step builders.
+
+`build_train_step` / `build_serve_step` compose the model with the optimizer
+under a mesh + sharding-rule context and return jit'd callables with explicit
+in/out shardings and donated buffers. The same builders feed the training
+loop (real arrays) and the multi-pod dry-run (ShapeDtypeStructs only).
+
+Distribution strategy (DESIGN.md §6): DP over ('pod','data'), FSDP parameter
+sharding over 'data', TP over 'model', optional SP/EP through rule
+overrides. Gradient reductions are inserted by XLA SPMD from the sharding
+propagation — there is no hand-written pmean; the collective schedule is
+inspected by the roofline pass instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as SH
+from repro.models import model as M
+from .optimizer import AdamW, AdamWState
+
+
+def batch_shardings(cfg: ArchConfig, mesh, rules: SH.ShardingRules, kind: str):
+    """NamedShardings for the input batch of a train/prefill step."""
+    bx = rules.act.get("batch")
+    if isinstance(bx, tuple):
+        bx = tuple(a for a in bx if a in mesh.shape) or None
+    sh = {"tokens": NamedSharding(mesh, PartitionSpec(bx, None))}
+    if cfg.family == "vlm":
+        sh["vision_emb"] = NamedSharding(mesh, PartitionSpec(bx, None, None))
+    if cfg.family == "audio":
+        sh["enc_emb"] = NamedSharding(mesh, PartitionSpec(bx, None, None))
+    return sh
+
+
+def cache_shardings(cfg: ArchConfig, mesh, rules: SH.ShardingRules, b: int, w: int):
+    axes = M.cache_axes(cfg, b, w)
+    shapes = M.cache_shapes(cfg, b, w)
+
+    def spec(shape_sds, axleaf):
+        out, used = [], set()
+        for dim, name in zip(shape_sds.shape, axleaf.axes):
+            ax = rules.act.get(name) if name else None
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a in mesh.shape and a not in used) or None
+            ok = ax is not None
+            if ok:
+                size = SH._mesh_axis_size(mesh, ax)
+                ok = size > 0 and dim % size == 0
+            if not ok or (not isinstance(ax, tuple) and ax in used):
+                out.append(None)
+            else:
+                out.append(ax)
+                used.update(ax if isinstance(ax, tuple) else (ax,))
+        return NamedSharding(mesh, PartitionSpec(*out))
+
+    return jax.tree_util.tree_map(spec, shapes, axes)
+
+
+def opt_state_shardings(param_sh, mesh):
+    rep = NamedSharding(mesh, PartitionSpec())
+    return AdamWState(
+        step=rep,
+        mu=param_sh,
+        nu=jax.tree_util.tree_map(lambda s: s, param_sh),
+        master=jax.tree_util.tree_map(lambda s: s, param_sh),
+    )
+
+
+def build_train_step(cfg: ArchConfig, mesh, rules: SH.ShardingRules, opt: AdamW,
+                     *, remat: bool = True, donate: bool = True,
+                     microbatches: int = 1):
+    """Returns (step_fn_jitted, param_shardings, batch_shardings_dict).
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 runs gradient accumulation: the global batch is split
+    into M sequential microbatches inside the jitted step (activation peak
+    divides by ~M at the cost of M x parameter traffic — the memory-vs-
+    bandwidth knob used by the big-activations cells, EXPERIMENTS.md §Perf
+    iteration 4)."""
+    tmpl = M.template(cfg)
+    psh = SH.named_shardings(tmpl, mesh, rules)
+    osh = opt_state_shardings(psh, mesh)
+    bsh = batch_shardings(cfg, mesh, rules, "train")
+    rep = NamedSharding(mesh, PartitionSpec())
+    loss_fn = functools.partial(M.loss_fn, cfg, remat=remat)
+
+    def step(params, opt_state, batch):
+        with SH.sharding_ctx(mesh, rules):
+            if microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                        + x.shape[1:]), batch)
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def mb_body(carry, b_i):
+                    gacc, lacc, aacc = carry
+                    (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b_i)
+                    gacc = jax.tree_util.tree_map(
+                        lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+                    return (gacc, lacc + l, aacc + m["aux"]), None
+
+                (gsum, lsum, asum), _ = jax.lax.scan(
+                    mb_body, (g0, jnp.float32(0), jnp.float32(0)), mb)
+                grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+                loss = lsum / microbatches
+                metrics = {"ce": loss - asum / microbatches, "aux": asum / microbatches}
+            new_params, new_state, gnorm = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_params, new_state, metrics
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, jax.tree_util.tree_map(lambda _: rep, {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0})),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, psh, bsh
+
+
+def build_serve_step(cfg: ArchConfig, mesh, rules: SH.ShardingRules, b: int, w: int,
+                     *, donate: bool = True):
+    """serve(params, cache, token, pos) -> (logits, cache), jitted+sharded."""
+    tmpl = M.template(cfg)
+    psh = SH.named_shardings(tmpl, mesh, rules)
+    csh = cache_shardings(cfg, mesh, rules, b, w)
+    bx = rules.act.get("batch")
+    if isinstance(bx, tuple):
+        bx = tuple(a for a in bx if a in mesh.shape) or None
+    if b % SH._mesh_axis_size(mesh, bx) != 0:
+        bx = None
+    tok_sh = NamedSharding(mesh, PartitionSpec(bx))
+    rep = NamedSharding(mesh, PartitionSpec())
+    logits_sh = NamedSharding(mesh, PartitionSpec(bx, None))
+
+    def serve(params, cache, token, pos):
+        with SH.sharding_ctx(mesh, rules):
+            return M.decode_step(cfg, params, cache, token, pos)
+
+    jitted = jax.jit(
+        serve,
+        in_shardings=(psh, csh, tok_sh, rep),
+        out_shardings=(logits_sh, csh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, psh, csh, tok_sh
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, rules: SH.ShardingRules):
+    """prefill(params, batch) -> logits (no optimizer), for inference-prefill
+    cells; remat off, forward only."""
+    tmpl = M.template(cfg)
+    psh = SH.named_shardings(tmpl, mesh, rules)
+    bsh = batch_shardings(cfg, mesh, rules, "prefill")
+
+    def prefill(params, batch):
+        with SH.sharding_ctx(mesh, rules):
+            logits, _aux = M.forward(cfg, params, batch, remat=False)
+            return logits
+
+    jitted = jax.jit(prefill, in_shardings=(psh, bsh))
+    return jitted, psh, bsh

@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device tests spawn subprocesses via run_subtest below.
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subtest(code: str, devices: int = 8, timeout: int = 300) -> str:
+    """Run `code` in a fresh process with N fake devices; returns stdout.
+    Raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env, cwd=REPO,
+    )
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode})\nstdout:\n{res.stdout}"
+            f"\nstderr:\n{res.stderr[-3000:]}"
+        )
+    return res.stdout

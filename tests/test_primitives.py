@@ -1,0 +1,119 @@
+"""Core primitive properties: sort/partition stability, compaction,
+expansion, multi-pass radix composition, hash quality (hypothesis)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import primitives as prim
+from repro.core.hash_join import hash32, choose_partition_bits
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_radix_partition_is_stable(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 1 << 16, n).astype(np.int32))
+    vals = jnp.arange(n, dtype=jnp.int32)  # original positions
+    ko, vo, off, sz = prim.radix_partition(keys, vals, start_bit=0, num_bits=bits)
+    digits = np.asarray(prim.radix_digits(ko, 0, bits))
+    assert (np.diff(digits) >= 0).all()  # partitioned
+    # stability: within each partition, original positions are increasing
+    vo_np = np.asarray(vo)
+    for p in range(1 << bits):
+        seg = vo_np[digits == p]
+        assert (np.diff(seg) > 0).all() if len(seg) > 1 else True
+    # offsets/sizes describe the layout
+    assert int(sz.sum()) == n
+    np.testing.assert_array_equal(
+        np.asarray(off), np.concatenate([[0], np.cumsum(np.asarray(sz))[:-1]])
+    )
+
+
+def test_multi_pass_equals_single_partition(rng):
+    keys = jnp.asarray(rng.integers(0, 1 << 20, 3000).astype(np.int32))
+    vals = jnp.arange(3000, dtype=jnp.int32)
+    # 12 bits in one conceptual partition == two 8+4-bit stable passes
+    ko1, vo1, off1, sz1 = prim.multi_pass_radix_partition(keys, vals, total_bits=12)
+    digits = prim.radix_digits(keys, 0, 12)
+    perm, off2, sz2 = prim.partition_permutation(digits, 1 << 12)
+    np.testing.assert_array_equal(np.asarray(ko1), np.asarray(jnp.take(keys, perm)))
+    np.testing.assert_array_equal(np.asarray(vo1), np.asarray(jnp.take(vals, perm)))
+    np.testing.assert_array_equal(np.asarray(off1), np.asarray(off2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 1000), cap=st.integers(1, 1200), seed=st.integers(0, 2**31 - 1))
+def test_compact_properties(n, cap, seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    vals = jnp.arange(n, dtype=jnp.int32)
+    (out,), count = prim.compact(mask, [vals], cap, fill=-7)
+    expect = np.asarray(vals)[np.asarray(mask)][:cap]
+    c = int(count)
+    assert c == min(int(mask.sum()), cap)
+    np.testing.assert_array_equal(np.asarray(out[:c]), expect[:c])
+    assert (np.asarray(out[c:]) == -7).all()
+    # stability: surviving values keep relative order (they're increasing)
+    assert (np.diff(np.asarray(out[:c])) > 0).all() if c > 1 else True
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 300), cap=st.integers(1, 3000), seed=st.integers(0, 2**31 - 1))
+def test_expand_offsets_properties(n, cap, seed):
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, 6, n).astype(np.int32))
+    row, rank, valid, total = prim.expand_offsets(counts, cap)
+    cn = np.asarray(counts)
+    assert int(total) == cn.sum()
+    row, rank, valid = np.asarray(row), np.asarray(rank), np.asarray(valid)
+    m = min(cn.sum(), cap)
+    assert valid[:m].all() and not valid[m:].any()
+    # each valid output row points at a row with rank < counts[row]
+    assert (rank[:m] < cn[row[:m]]).all()
+    # expansion is row-sorted and rank-sequential within rows
+    assert (np.diff(row[:m]) >= 0).all()
+
+
+def test_hash32_avalanche(rng):
+    """Low bits of the hash must be near-uniform even for sequential keys."""
+    keys = jnp.arange(1 << 14, dtype=jnp.int32)
+    for bits in (4, 8):
+        d = np.asarray(hash32(keys) & ((1 << bits) - 1))
+        counts = np.bincount(d, minlength=1 << bits)
+        assert counts.max() < 2.0 * counts.mean()
+
+
+def test_choose_partition_bits_bounds():
+    for n, blk in ((1000, 256), (1 << 20, 256), (10, 64)):
+        bits = choose_partition_bits(n, blk)
+        assert 1 <= bits <= 20
+        # expected partition size <= blk/2 (headroom against overflow)
+        assert n / (1 << bits) <= blk
+
+
+def test_sort_pairs_multiple_values(rng):
+    k = jnp.asarray(rng.integers(0, 100, 500).astype(np.int32))
+    v1 = jnp.arange(500, dtype=jnp.int32)
+    v2 = jnp.asarray(rng.normal(size=500).astype(np.float32))
+    ko, v1o, v2o = prim.sort_pairs(k, v1, v2)
+    order = np.lexsort((np.asarray(v1), np.asarray(k)))  # stable by key
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(k)[order])
+    np.testing.assert_array_equal(np.asarray(v1o), np.asarray(v1)[order])
+    np.testing.assert_array_equal(np.asarray(v2o), np.asarray(v2)[order])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 1500), hi=st.sampled_from([100, 1 << 16, (1 << 30) - 1]),
+       seed=st.integers(0, 2**31 - 1))
+def test_radix_sort_pairs_equals_sort(n, hi, seed):
+    """The paper-faithful LSD radix sort == XLA's stable sort."""
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.integers(0, hi, n).astype(np.int32))
+    v = jnp.arange(n, dtype=jnp.int32)
+    ko, vo = prim.radix_sort_pairs(k, v)
+    kr, vr = prim.sort_pairs(k, v)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vr))

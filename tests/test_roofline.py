@@ -1,0 +1,101 @@
+"""Roofline machinery: HLO collective/dot parsing (synthetic HLO), trip-count
+recovery, term math, analytic-vs-model cross-checks."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.launch import roofline as RL
+from repro.configs.base import SHAPES, get_config
+from repro.models import flops as FL
+from repro.models.model import num_params
+
+
+SYNTH_HLO = """
+HloModule test, is_scheduled=true
+
+%region_body.1 (arg: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %ag = f32[16,128]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[8,128]{1,0} all-reduce(%x), to_apply=%sum
+  ROOT %r = f32[8,128]{1,0} add(%x, %x)
+}
+
+%region_cond.1 (arg: s32[]) -> pred[] {
+  %i = s32[] parameter(0)
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+  %p = f32[8,128]{1,0} parameter(0)
+  %w = (f32[8,128]{1,0}) while(%p), condition=%region_cond.1, body=%region_body.1
+  %ag2 = f32[32,128]{1,0} all-gather(%p), dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%p), dimensions={0}
+  ROOT %out = f32[8,128]{1,0} copy(%p)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = RL.parse_collectives(SYNTH_HLO)
+    assert stats.counts == {"all-gather": 2, "all-reduce": 1, "reduce-scatter": 1}
+    # static: 16*128*4 + 8*128*4 + 32*128*4 + 4*128*4
+    assert stats.bytes_static == (16 + 8 + 32 + 4) * 128 * 4
+
+
+def test_parse_collectives_trip_weighting():
+    stats = RL.parse_collectives(SYNTH_HLO)
+    # ops inside the while body are x24; entry ops x1
+    assert stats.bytes_weighted == ((16 + 8) * 24 + 32 + 4) * 128 * 4
+
+
+def test_shape_bytes_dtypes():
+    assert RL._shape_bytes("bf16[2,3]") == 12
+    assert RL._shape_bytes("f32[10]{0}") == 40
+    assert RL._shape_bytes("(f32[2], s8[8])") == 16
+    assert RL._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_math():
+    t = RL.roofline_terms(197e12 * 256, 819e9, 50e9, chips=256)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+    t2 = RL.roofline_terms(1e12, 819e9 * 10, 0, chips=256)
+    assert t2["dominant"] == "memory_s"
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x7b", "zamba2-2.7b"])
+def test_analytic_flops_close_to_6nd(arch):
+    """Analytic total must bracket 6ND x remat: useful ratio in (0.15, 1.0]."""
+    cfg = get_config(arch)
+    est = FL.estimate(cfg, SHAPES["train_4k"], {"data": 16, "model": 16})
+    ratio = est.model_flops / est.flops_total
+    assert 0.15 < ratio <= 1.0, ratio
+
+
+def test_remat_factor_scales_compute():
+    cfg = get_config("olmo-1b")
+    e4 = FL.estimate(cfg, SHAPES["train_4k"], {"data": 16, "model": 16},
+                     remat_factor=4.0)
+    e3 = FL.estimate(cfg, SHAPES["train_4k"], {"data": 16, "model": 16},
+                     remat_factor=3.0)
+    assert e3.flops_total < e4.flops_total
+    # layers scale with the factor; embed/head don't
+    layer4 = e4.flops_total - 3 * (2 * 256 * 4096 * cfg.d_model * cfg.padded_vocab)
+    layer3 = e3.flops_total - 3 * (2 * 256 * 4096 * cfg.d_model * cfg.padded_vocab)
+    assert abs(layer3 / layer4 - 0.75) < 1e-6
+
+
+def test_decode_estimate_uses_active_params():
+    cfg = get_config("mixtral-8x7b")
+    est = FL.estimate(cfg, SHAPES["decode_32k"], {"data": 16, "model": 16})
+    n_act = est.model_flops / (2.0 * SHAPES["decode_32k"].global_batch)
+    assert n_act < 0.4 * num_params(cfg)  # top-2 of 8 experts + attention
+
+
+def test_sliding_window_caps_decode_cache_cost():
+    swa = get_config("mixtral-8x7b")
+    est = FL.estimate(swa, SHAPES["long_500k"], {"data": 16, "model": 16})
+    assert est.notes["kv_len"] == 4096  # not 524288

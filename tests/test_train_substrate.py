@@ -1,0 +1,192 @@
+"""Optimizer, checkpointing, fault-tolerant loop, grad compression."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import AdamW, cosine_schedule, global_norm
+from repro.train import checkpoint as CKPT
+from repro.train.loop import LoopConfig, train_loop
+from repro.dist.collectives import (EFState, ef_compress_decompress,
+                                    init_ef_state, quantize_int8,
+                                    dequantize_int8)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_clipping_and_gnorm():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update({"w": jnp.asarray([3.0, 4.0, 0.0])}, state, params)
+    assert abs(float(gnorm) - 5.0) < 1e-5
+
+
+def test_adamw_master_weights_bf16():
+    """bf16 params + f32 master track the f32-only trajectory closely."""
+    opt32 = AdamW(lr=0.05, weight_decay=0.0, clip_norm=None, master_weights=False)
+    optbf = AdamW(lr=0.05, weight_decay=0.0, clip_norm=None, master_weights=True)
+    p32 = {"w": jnp.full((4,), 2.0, jnp.float32)}
+    pbf = {"w": jnp.full((4,), 2.0, jnp.bfloat16)}
+    s32, sbf = opt32.init(p32), optbf.init(pbf)
+    for _ in range(100):
+        p32, s32, _ = opt32.update({"w": 2 * p32["w"]}, s32, p32)
+        pbf, sbf, _ = optbf.update({"w": 2 * pbf["w"].astype(jnp.float32)}, sbf, pbf)
+    assert float(jnp.abs(sbf.master["w"] - p32["w"]).max()) < 5e-2
+
+
+def test_cosine_schedule():
+    f = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(f(jnp.int32(100))) - 0.1) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    state = ({"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3), jnp.int32)}},
+             jnp.int32(7))
+    CKPT.save_checkpoint(tmp_path, 12, state, extra={"note": "x"})
+    like = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), state)
+    restored, step, extra = CKPT.restore_checkpoint(tmp_path, like)
+    assert step == 12 and extra == {"note": "x"}
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    state = {"w": jnp.zeros(3)}
+    for s in (1, 2, 3, 4, 5):
+        CKPT.save_checkpoint(tmp_path, s, state, keep=2)
+    assert CKPT.latest_step(tmp_path) == 5
+    kept = sorted(d.name for d in tmp_path.iterdir() if d.name.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_survives_stale_pointer(tmp_path):
+    state = {"w": jnp.zeros(3)}
+    CKPT.save_checkpoint(tmp_path, 3, state)
+    # simulate a crash that wrote LATEST but not the directory
+    (tmp_path / "LATEST").write_text("step_00000099")
+    assert CKPT.latest_step(tmp_path) == 3
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+def _toy_step():
+    opt = AdamW(lr=0.05, weight_decay=0.0, clip_norm=None)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return jnp.mean((p["w"] * batch["x"] - batch["y"]) ** 2)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(g, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return opt, jax.jit(step)
+
+
+def _toy_data(step):
+    rng = np.random.default_rng(step)
+    x = jnp.asarray(rng.normal(size=8).astype(np.float32))
+    return {"x": x, "y": 3.0 * x}
+
+
+def test_loop_loss_drops_and_resume_equivalence(tmp_path):
+    opt, step = _toy_step()
+    params = {"w": jnp.zeros(8)}
+
+    # one continuous 40-step run
+    p1, s1, rep1 = train_loop(step, params, opt.init(params), _toy_data,
+                              LoopConfig(total_steps=40), log=lambda *_: None)
+    assert rep1.losses[-1] < rep1.losses[0]
+
+    # 20 steps, "crash", resume to 40 — must match bitwise
+    ck = str(tmp_path / "ck")
+    p2, s2, _ = train_loop(step, params, opt.init(params), _toy_data,
+                           LoopConfig(total_steps=20, ckpt_dir=ck, ckpt_every=10),
+                           log=lambda *_: None)
+    p3, s3, rep3 = train_loop(step, params, opt.init(params), _toy_data,
+                              LoopConfig(total_steps=40, ckpt_dir=ck, ckpt_every=10),
+                              log=lambda *_: None)
+    assert rep3.resumed_from == 20
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p3["w"]))
+
+
+def test_loop_straggler_detection(monkeypatch):
+    opt, step = _toy_step()
+    params = {"w": jnp.zeros(8)}
+    import time as _t
+
+    calls = {"n": 0}
+    real_step = step
+
+    def slow_step(p, s, b):
+        calls["n"] += 1
+        if calls["n"] == 15:
+            _t.sleep(0.5)  # inject one straggler step
+        return real_step(p, s, b)
+
+    _, _, rep = train_loop(slow_step, params, opt.init(params), _toy_data,
+                           LoopConfig(total_steps=20, straggler_factor=3.0),
+                           log=lambda *_: None)
+    assert any(s[0] == 15 for s in rep.straggler_steps)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+def test_int8_quantize_roundtrip(rng):
+    x = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.51 + 1e-7
+
+
+def test_ef_compression_converges():
+    """EF-int8 SGD reaches the optimum a plain-quantized SGD cannot."""
+    w = jnp.asarray([1.0, -2.0, 0.5])
+    target = jnp.asarray([0.3, 0.7, -0.2])
+    ef = init_ef_state({"w": w})
+    lr = 0.05
+    params = {"w": w}
+    for _ in range(400):
+        g = {"w": params["w"] - target}
+        g_c, ef = ef_compress_decompress(g, ef)
+        params = {"w": params["w"] - lr * g_c["w"]}
+    assert float(jnp.abs(params["w"] - target).max()) < 1e-2
+
+
+def test_async_checkpointer(tmp_path):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.train.checkpoint import AsyncCheckpointer, restore_checkpoint
+
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    state = {"w": jnp.arange(10.0)}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree_util.tree_map(lambda x: x + s, state))
+    ck.wait()
+    restored, step, _ = restore_checkpoint(tmp_path, state)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(10.0) + 3)
