@@ -1,0 +1,1 @@
+"""Paper-figure benchmark drivers (see run.py for the entry point)."""

@@ -1,6 +1,10 @@
 """Benchmark driver — one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.
 
+Runs either way:
+    python benchmarks/run.py [section-prefix]
+    python -m benchmarks.run [section-prefix]
+
 Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
 runs use 2^27 rows — same code, larger constant)."""
 import os
@@ -10,11 +14,23 @@ import time
 # 8-byte key/payload experiments (paper §5.2.5) need x64 before jax init.
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 
+# Script mode (`python benchmarks/run.py`) has no parent package, so the
+# relative imports below must be absolute and the repo root importable.
+# Both modes get src/ on the path so `repro` resolves without a PYTHONPATH
+# export.
+_repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_paths = [os.path.join(_repo, "src")]
+if __package__ in (None, ""):
+    _paths.insert(0, _repo)
+for _p in _paths:
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 
 def main() -> None:
     t0 = time.time()
-    from . import joins, groupby_bench, integration_bench
-    from .common import ROWS
+    from benchmarks import joins, groupby_bench, integration_bench
+    from benchmarks.common import ROWS
 
     sections = [
         ("fig1", joins.fig1_time_breakdown),

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full test suite, runnable from any checkout with no env
+# setup (pyproject.toml's pythonpath handles src/; the explicit PYTHONPATH
+# below keeps the ROADMAP.md invocation working on pytest < 7 too).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

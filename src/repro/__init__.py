@@ -1,0 +1,17 @@
+"""Reproduction of "Efficiently Processing Joins and Grouped Aggregations
+on GPUs" on the JAX/Pallas stack, grown toward a production-scale sharded
+system (see ROADMAP.md).
+
+Subpackages (import side-effect free; nothing here touches jax device
+state):
+
+  core      join/group-by algorithms, planner, memory model
+  kernels   Pallas kernels (interpret=True on CPU)
+  dist      sharding rules, compressed collectives, pipeline parallelism
+  models    architecture zoo over one template/forward/decode API
+  train     optimizer, loop, checkpointing, elastic remesh
+  launch    mesh construction, dry-run, roofline, launchers
+  data      synthetic relational + LM data pipelines
+  serve     decode-serving engine
+  configs   architecture configs (full + CPU-reduced)
+"""

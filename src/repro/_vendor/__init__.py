@@ -1,0 +1,3 @@
+"""Vendored fallbacks for optional third-party packages that the offline
+CI image cannot install. Nothing here is imported unless the real package
+is absent (see tests/conftest.py)."""

@@ -1,0 +1,217 @@
+"""Minimal offline stand-in for `hypothesis` (given/settings/strategies).
+
+The CI container cannot pip-install, so the property tests would otherwise
+fail at collection. This shim replays each @given test over `max_examples`
+pseudo-random draws from a *seeded* numpy generator — deterministic across
+runs (seed derives from the test's qualified name and the example index), so
+a failure reproduces exactly. It is NOT hypothesis: no shrinking, no
+database, no coverage-guided generation — just honest randomized testing of
+the same properties.
+
+Installed into sys.modules as `hypothesis` / `hypothesis.strategies` by
+`install()`, which tests/conftest.py calls only when the real package is
+missing. If hypothesis is ever installable, nothing here runs.
+
+Supported surface (what this repo's tests use, plus the obvious neighbors):
+  given (kwargs form), settings(max_examples, deadline), assume,
+  strategies.{integers, sampled_from, booleans, floats, lists, tuples,
+  just, one_of}, HealthCheck.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Skip the current example when its precondition fails."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a numpy Generator."""
+
+    def __init__(self, draw, label="strategy"):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              f"{self._label}.map")
+
+    def filter(self, pred, max_tries: int = 100):
+        def _draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption(f"filter on {self._label} never satisfied")
+
+        return SearchStrategy(_draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return self._label
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                          f"sampled_from({elements!r})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(2)), "booleans()")
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9, *,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> SearchStrategy:
+    def _draw(rng):
+        return float(rng.uniform(min_value, max_value))
+
+    return SearchStrategy(_draw, f"floats({min_value}, {max_value})")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def one_of(*strategies) -> SearchStrategy:
+    flat = strategies[0] if len(strategies) == 1 and isinstance(
+        strategies[0], (list, tuple)) else strategies
+    return SearchStrategy(
+        lambda rng: flat[int(rng.integers(len(flat)))].draw(rng), "one_of")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def _draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(_draw, "lists")
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                          "tuples")
+
+
+class HealthCheck:
+    """Accepted and ignored (suppress_health_check=... compatibility)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+    all = classmethod(lambda cls: [])
+
+
+class settings:
+    """Decorator recording max_examples; deadline and health checks are
+    accepted for signature compatibility and ignored (no wall-clock budget
+    enforcement in the shim)."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*args, **strategy_kwargs):
+    """@given(name=strategy, ...). Positional strategies are not supported
+    (this repo only uses the kwargs form)."""
+    if args:
+        raise TypeError("hypothesis fallback shim supports only @given(**kwargs)")
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        unknown = set(strategy_kwargs) - set(sig.parameters)
+        if unknown:
+            raise TypeError(f"@given got undefined arguments {sorted(unknown)}")
+        passthrough = [p for name, p in sig.parameters.items()
+                       if name not in strategy_kwargs]
+        seed_base = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        @functools.wraps(fn)
+        def wrapper(*wargs, **wkwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None)
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            ran = 0
+            for i in range(n):
+                rng = np.random.default_rng((seed_base, i))
+                drawn = None
+                try:
+                    # draws sit inside the try: a .filter() that exhausts its
+                    # tries skips the example exactly like a failed assume()
+                    drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                    fn(*wargs, **wkwargs, **drawn)
+                    ran += 1
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception:
+                    print(f"Falsifying example ({fn.__qualname__}, "
+                          f"example {i}): {drawn!r}", file=sys.stderr)
+                    raise
+            if n and not ran:
+                raise UnsatisfiedAssumption(
+                    f"{fn.__qualname__}: every example failed assume()")
+
+        # Hide the drawn parameters from pytest's fixture resolution while
+        # keeping any real fixtures (e.g. rng) visible. __signature__ stops
+        # inspect from following __wrapped__ back to the original.
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        return wrapper
+
+    return decorate
+
+
+def install():
+    """Register this shim as `hypothesis` + `hypothesis.strategies` in
+    sys.modules. Call only after a real `import hypothesis` failed."""
+    if "hypothesis" in sys.modules:
+        return sys.modules["hypothesis"]
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats", "lists",
+                 "tuples", "just", "one_of"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return hyp

@@ -1,0 +1,1 @@
+"""Architecture configs: full-scale + CPU-reduced variants (configs.base)."""

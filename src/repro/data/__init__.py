@@ -1,0 +1,1 @@
+"""Deterministic synthetic data: relational generators + LM batch fns."""

@@ -1,0 +1,11 @@
+"""Distribution substrate: logical-axis sharding rules, compressed
+collectives, and pipeline parallelism.
+
+Three modules (DESIGN.md §6):
+
+  sharding     ShardingRules (logical->mesh axis tables), the mesh+rules
+               trace context, and shard_act activation constraints.
+  collectives  int8-quantized DP all-reduce with error feedback.
+  pipeline     GPipe-style microbatch pipeline over a mesh axis.
+"""
+from . import collectives, pipeline, sharding  # noqa: F401

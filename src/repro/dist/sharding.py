@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules and the mesh trace context (DESIGN.md §6).
+
+Model code never names mesh axes. Parameters declare *logical* axes in their
+templates (params.P) and activations are constrained through `shard_act`
+with logical names; a `ShardingRules` table maps logical -> mesh axes.
+Changing the distribution strategy (FSDP on/off, sequence sharding, expert
+parallelism, the flat-DP variant) is a rule-table edit, never a model edit —
+the paxml-style "sharding rules as data" idiom.
+
+Every mapping applies a divisibility fallback: a tensor dim that does not
+divide the product of its mapped mesh axes is replicated instead (reduced
+CPU configs have tiny head counts; production meshes have 16-wide axes).
+Within one tensor, the first logical axis to claim a mesh axis wins and
+later claims are dropped (e.g. attention scores constrain both 'kv_heads'
+and 'seq'; under sequence sharding both map to 'model' and 'kv_heads', being
+first, takes it — head-parallel attention).
+
+`sharding_ctx` installs (mesh, rules) for the duration of a trace;
+`shard_act` is a no-op outside a context, so the same model code runs
+single-device tests and 512-chip dry-runs unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.params import axis_spec, specs_from_template
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Two logical->mesh tables: `param` for weight templates, `act` for
+    activation constraints. Values are a mesh axis name, a tuple of mesh
+    axis names (2D sharding), or None (replicate)."""
+
+    param: dict[str, Any]
+    act: dict[str, Any]
+
+
+def default_rules(*, multi_pod: bool = False, seq_shard: bool = False,
+                  fsdp: bool = True) -> ShardingRules:
+    """The DESIGN.md §6 strategy: DP over ('pod','data'), FSDP parameter
+    sharding over 'data', TP over 'model'; `seq_shard` adds sequence
+    parallelism for train/prefill activations (decode keeps seq unsharded —
+    one token has no seq dim to split)."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fs = "data" if fsdp else None
+    param = {
+        "embed": fs,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "inner": "model",
+        "conv": None,
+        "experts": None,
+        "expert_embed": fs,
+        "expert_mlp": "model",
+        "layers": None,  # scanned stack dim: always unsharded
+    }
+    act = {
+        "batch": dp,
+        "tokens": dp,  # flattened (b*s) dim of MoE dispatch
+        "seq": "model" if seq_shard else None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "inner": "model",
+        "vocab": "model",
+    }
+    return ShardingRules(param=param, act=act)
+
+
+def _mesh_axis_size(mesh, ax) -> int:
+    """Product of the sizes of `ax` (None | name | tuple of names); axes not
+    present in the mesh count as 1."""
+    if ax is None:
+        return 1
+    shape = dict(mesh.shape)
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= shape.get(a, 1)
+        return n
+    return shape.get(ax, 1)
+
+
+def named_shardings(template, mesh, rules: ShardingRules):
+    """NamedSharding pytree for a parameter template (P leaves), via the
+    same divisibility-fallback spec builder used for counting/init."""
+    specs = specs_from_template(template, rules.param, dict(mesh.shape))
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trace context
+# ---------------------------------------------------------------------------
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_sharding_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: ShardingRules):
+    """Install (mesh, rules) for the enclosed trace. Re-entrant; the inner
+    context wins."""
+    token = _CTX.set((mesh, rules))
+    try:
+        yield (mesh, rules)
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx():
+    """The active (mesh, rules) pair, or None outside any sharding_ctx."""
+    return _CTX.get()
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+def shard_act(x, axes):
+    """Constrain activation `x` to the current context's mapping of logical
+    `axes` (tuple of logical names / None, one per dim). No-op outside a
+    sharding_ctx, so model code is mesh-agnostic."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard_act: {len(axes)} axes for rank-{x.ndim} array")
+    spec = axis_spec(x.shape, axes, rules.act, dict(mesh.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,3 @@
+"""Launchers and analysis: mesh construction, train/serve entry points,
+multi-pod dry-run, roofline. NOTE: launch.dryrun pins XLA_FLAGS at import
+(512 fake devices) — import it only in a dedicated process."""

@@ -8,19 +8,25 @@ from __future__ import annotations
 import jax
 
 
+def _mk(shape: tuple, axes: tuple):
+    # jax.sharding.AxisType (explicit-sharding API) only exists on jax
+    # >= 0.5; every axis is Auto there by default, so omitting it on older
+    # versions is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh for tests/elastic rescale."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mk(shape, axes)
 
 
 def mesh_chips(mesh) -> int:

@@ -1,0 +1,1 @@
+"""Architecture zoo: templates, forward/loss, decode, FLOPs accounting."""

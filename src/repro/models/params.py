@@ -79,40 +79,51 @@ def abstract_from_template(template: Any, dtype=jnp.float32):
     )
 
 
+def axis_spec(shape, axes, rules: dict[str, Any], mesh_shape: dict[str, int]):
+    """Map one tensor's logical axes -> a PartitionSpec under a rule table.
+
+    The single spec builder shared by parameter templates and activation
+    constraints (dist.sharding.shard_act). Fallbacks, in order, per dim:
+    axes absent from the mesh or of size 1 are dropped; within a tensor the
+    first logical axis to claim a mesh axis wins; a dim that does not divide
+    its mapped axes is replicated (tuple mappings greedily drop trailing
+    axes until the dim divides)."""
+    from jax.sharding import PartitionSpec
+
+    out, used = [], set()
+    for dim, name in zip(shape, axes):
+        ax = rules.get(name) if name else None
+        if isinstance(ax, (tuple, list)):  # 2D sharding, e.g. expert FFN dims
+            cand = tuple(a for a in ax if a not in used and mesh_shape.get(a, 1) > 1)
+            while cand:
+                size = 1
+                for a in cand:
+                    size *= mesh_shape[a]
+                if dim % size == 0:
+                    break
+                cand = cand[:-1]
+            if cand:
+                out.append(cand if len(cand) > 1 else cand[0])
+                used.update(cand)
+            else:
+                out.append(None)
+            continue
+        size = mesh_shape.get(ax, 1) if ax is not None else 1
+        if ax is None or ax in used or size <= 1 or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+            used.add(ax)
+    return PartitionSpec(*out)
+
+
 def specs_from_template(template: Any, rules: dict[str, str | None],
                         mesh_shape: dict[str, int]):
     """Map logical axes -> mesh axes with divisibility fallback (replicate
     any dim that does not divide its mesh axis)."""
-    from jax.sharding import PartitionSpec
-
-    def _spec(leaf: P) -> PartitionSpec:
-        out, used = [], set()
-        for dim, ax in zip(leaf.shape, leaf.axes):
-            mesh_ax = rules.get(ax) if ax else None
-            if isinstance(mesh_ax, tuple):  # 2D sharding, e.g. expert FFN dims
-                axes = tuple(a for a in mesh_ax if a not in used and mesh_shape.get(a, 1) > 1)
-                # greedy fallback: drop trailing axes until the dim divides
-                while axes:
-                    size = 1
-                    for a in axes:
-                        size *= mesh_shape.get(a, 1)
-                    if dim % size == 0:
-                        break
-                    axes = axes[:-1]
-                if axes:
-                    out.append(axes if len(axes) > 1 else axes[0])
-                    used.update(axes)
-                else:
-                    out.append(None)
-                continue
-            if mesh_ax is None or mesh_ax in used or dim % mesh_shape.get(mesh_ax, 1) != 0:
-                out.append(None)
-            else:
-                out.append(mesh_ax)
-                used.add(mesh_ax)
-        return PartitionSpec(*out)
-
-    return jax.tree_util.tree_map(_spec, template, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        lambda leaf: axis_spec(leaf.shape, leaf.axes, rules, mesh_shape),
+        template, is_leaf=lambda x: isinstance(x, P))
 
 
 def count_params(template: Any) -> int:

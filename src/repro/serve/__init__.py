@@ -1,0 +1,1 @@
+"""Decode-serving engine (continuous batching over the decode step)."""

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, sharded step builders, fault-tolerant
+loop, checkpointing, elastic remesh."""

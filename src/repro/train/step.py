@@ -40,25 +40,18 @@ def batch_shardings(cfg: ArchConfig, mesh, rules: SH.ShardingRules, kind: str):
 
 
 def cache_shardings(cfg: ArchConfig, mesh, rules: SH.ShardingRules, b: int, w: int):
+    """Decode-cache NamedShardings. Uses the same spec builder as shard_act
+    so the cache layout always matches the decode attention layout (else
+    GSPMD reshards the whole KV cache every step — layers.py)."""
+    from repro.models.params import axis_spec
+
     axes = M.cache_axes(cfg, b, w)
     shapes = M.cache_shapes(cfg, b, w)
+    mesh_shape = dict(mesh.shape)
 
     def spec(shape_sds, axleaf):
-        out, used = [], set()
-        for dim, name in zip(shape_sds.shape, axleaf.axes):
-            ax = rules.act.get(name) if name else None
-            if isinstance(ax, tuple):
-                ax = tuple(a for a in ax if a in mesh.shape and a not in used) or None
-            ok = ax is not None
-            if ok:
-                size = SH._mesh_axis_size(mesh, ax)
-                ok = size > 0 and dim % size == 0
-            if not ok or (not isinstance(ax, tuple) and ax in used):
-                out.append(None)
-            else:
-                out.append(ax)
-                used.update(ax if isinstance(ax, tuple) else (ax,))
-        return NamedSharding(mesh, PartitionSpec(*out))
+        return NamedSharding(
+            mesh, axis_spec(shape_sds.shape, axleaf.axes, rules.act, mesh_shape))
 
     return jax.tree_util.tree_map(spec, shapes, axes)
 

@@ -10,6 +10,16 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# The CI container cannot pip-install hypothesis; fall back to the vendored
+# seeded-numpy shim so the property tests still collect and run offline.
+# The real package wins whenever it is importable.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._vendor import hypothesis_fallback
+
+    hypothesis_fallback.install()
+
 
 @pytest.fixture
 def rng():
