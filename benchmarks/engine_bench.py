@@ -1,0 +1,117 @@
+"""End-to-end engine benchmarks: TPC-style multi-join + group-by queries,
+planner-on vs fixed-algorithm baselines.
+
+Validates the engine acceptance bar: the planner-chosen physical plan
+(engine-estimated statistics, Fig. 18 + cost-model selection) must be no
+slower than the worst fixed-algorithm plan, and ideally tracks the best.
+Also times plan optimization itself (stats collection + ordering) and the
+primitive-profile calibration."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.data import relgen
+from repro.engine import Catalog, optimize, scan
+
+from .common import N_BASE, emit, time_fn
+
+FIXED = [("smj", "gfur"), ("smj", "gftr"), ("phj", "gfur"), ("phj", "gftr")]
+
+
+def _star_query(n_fact: int, n_dim: int):
+    fact, dims, fks, dks = relgen.generate_star(
+        n_fact, n_dim, 2, payloads_per_dim=2, seed=0
+    )
+    cat = Catalog({"fact": fact, "dim0": dims[0], "dim1": dims[1]})
+    q = (scan("fact")
+         .join(scan("dim0"), left_key="fk0", right_key="k0")
+         .join(scan("dim1"), left_key="fk1", right_key="k1")
+         .group_by("fk0", p1_0="sum", p0_0="max"))
+    return q, cat
+
+
+def _time_plan(plan, iters=5, warmup=2):
+    tables = dict(plan.catalog.tables)
+    fn = jax.jit(lambda tb: plan.run(tb, jit=False))
+    return time_fn(fn, tables, iters=iters, warmup=warmup)
+
+
+def _time_plans_interleaved(tagged_plans, iters=7, warmup=2):
+    """Median us per plan, with the timing rounds interleaved across plans
+    so clock/thermal drift hits every candidate equally — consecutive
+    per-candidate blocks can drift >10% between the first and last block,
+    which is larger than the planner-vs-baseline gaps being compared."""
+    runs = []
+    for tag, plan in tagged_plans:
+        tables = dict(plan.catalog.tables)
+        fn = jax.jit(lambda tb, p=plan: p.run(tb, jit=False))
+        for _ in range(warmup):
+            jax.block_until_ready(fn(tables))
+        runs.append((tag, fn, tables, []))
+    for _ in range(iters):
+        for tag, fn, tables, ts in runs:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(tables))
+            ts.append(time.perf_counter() - t0)
+    return {tag: sorted(ts)[len(ts) // 2] * 1e6 for tag, _, _, ts in runs}
+
+
+def tpc_star_query():
+    """Two PK-FK joins + grouped aggregation; planner vs fixed baselines."""
+    n_fact, n_dim = 2 * N_BASE, max(N_BASE // 4, 512)
+    q, cat = _star_query(n_fact, n_dim)
+
+    t0 = time.perf_counter()
+    planned = optimize(q, cat)
+    emit("engine/star/optimize_wall", (time.perf_counter() - t0) * 1e6,
+         f"predicted={planned.total_cost*1e6:.0f}us")
+
+    # compile everything first, then interleave timing rounds so the
+    # planner-vs-baseline comparison is apples to apples
+    candidates = [("planned", planned)]
+    for alg, pat in FIXED:
+        tag = f"fixed/{alg.upper()}-{'OM' if pat == 'gftr' else 'UM'}"
+        candidates.append((tag, optimize(q, cat, force_join=(alg, pat))))
+    times = _time_plans_interleaved(candidates)
+
+    us_planned = times["planned"]
+    emit("engine/star/planned", us_planned,
+         f"{n_fact/(us_planned/1e6)/1e6:.2f} Mrows/s")
+    fixed_times = [times[t] for t, _ in candidates[1:]]
+    for (tag, _), us in zip(candidates[1:], fixed_times):
+        emit(f"engine/star/{tag}", us, "")
+    worst, best = max(fixed_times), min(fixed_times)
+    emit("engine/star/planner_vs_worst", 0.0,
+         f"planned={us_planned:.0f}us worst={worst:.0f}us "
+         f"not_slower={us_planned <= worst * 1.05}")
+    emit("engine/star/planner_vs_best", 0.0,
+         f"gap_to_best={us_planned/best:.2f}x")
+
+
+def filtered_topk_query():
+    """Filter + join + group-by + order-by-limit through the full stack."""
+    w = relgen.JoinWorkload("engine", N_BASE // 2, N_BASE, 2, 2,
+                            match_ratio=0.5)
+    R, S = relgen.generate(w)
+    cat = Catalog({"R": R, "S": S})
+    q = (scan("S")
+         .filter("s1", ">=", 0)
+         .join(scan("R"), key="k")
+         .group_by("k", r1="sum")
+         .order_by("r1_sum", limit=64, descending=True))
+    planned = optimize(q, cat)
+    us = _time_plan(planned)
+    emit("engine/topk/planned", us, f"{(w.n_r+w.n_s)/(us/1e6)/1e6:.2f} Mtuples/s")
+
+
+def calibration():
+    """PrimitiveProfile.measure(): wall time + measured constants."""
+    from repro.core.planner import PrimitiveProfile
+
+    t0 = time.perf_counter()
+    prof = PrimitiveProfile.measure(n=1 << 16)
+    emit("engine/calibrate/measure_wall", (time.perf_counter() - t0) * 1e6,
+         f"seq_bw={prof.seq_bw/1e9:.1f}GB/s "
+         f"unclustered_pen={prof.unclustered_penalty:.1f}x")

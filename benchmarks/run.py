@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV.
 Runs either way:
     python benchmarks/run.py [section-prefix]
     python -m benchmarks.run [section-prefix]
+    python -m benchmarks.run --list      # print section tags, run nothing
 
 Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
 runs use 2^27 rows — same code, larger constant)."""
@@ -29,7 +30,7 @@ for _p in _paths:
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import joins, groupby_bench, integration_bench
+    from benchmarks import joins, groupby_bench, integration_bench, engine_bench
     from benchmarks.common import ROWS
 
     sections = [
@@ -52,8 +53,16 @@ def main() -> None:
         ("moe_dispatch", integration_bench.moe_dispatch),
         ("feature_pipeline", integration_bench.feature_join_pipeline),
         ("kernels", integration_bench.kernel_vs_xla),
+        ("engine/star", engine_bench.tpc_star_query),
+        ("engine/topk", engine_bench.filtered_topk_query),
+        ("engine/calibrate", engine_bench.calibration),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    if "--list" in args:
+        for tag, _ in sections:
+            print(tag)
+        return
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     for tag, fn in sections:
         if only and not tag.startswith(only):

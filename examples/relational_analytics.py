@@ -1,26 +1,44 @@
-"""TPC-style analytics on device: scaled TPC-H/DS join extracts (paper
-Table 6) + grouped aggregation, with planner-selected algorithms.
+"""TPC-style analytics through the query engine: declarative plans over
+scaled TPC-H/DS extracts (paper Table 6) and a star schema, optimized with
+engine-estimated statistics (no hand-written JoinStats) and executed under
+jax.jit. `explain()` shows the per-operator algorithm/pattern choice and
+the cost model's prediction.
 
     PYTHONPATH=src python examples/relational_analytics.py
 """
 import jax.numpy as jnp
 
-from repro.core import (Table, join, group_aggregate, JoinStats,
-                        choose_algorithm, KEY_SENTINEL)
 from repro.data import relgen
+from repro.engine import Catalog, optimize, scan
 
-for jid in ("J1", "J3", "J4"):
-    R, S, mode = relgen.generate_tpc(jid, scale=1 / 1024)
-    stats = JoinStats(R.num_rows, S.num_rows,
-                      len(R.column_names) - 1, len(S.column_names) - 1)
-    alg, pattern, why = choose_algorithm(stats)
-    T, count = join(R, S, algorithm=alg, pattern=pattern, mode=mode)
-    print(f"{jid}: |R|={R.num_rows} |S|={S.num_rows} -> {int(count)} rows "
-          f"via {alg.upper()}-{'OM' if pattern=='gftr' else 'UM'} ({why[:50]})")
 
-# group-by over the last join's output
-pay = [c for c in T.column_names if c != "k"][0]
-G, g_cnt = group_aggregate(
-    Table({"k": T["k"] % 1024, "v": T[pay].astype(jnp.float32)}),
-    key="k", aggs={"v": "mean"}, num_groups=2048, strategy="partition_hash")
-print(f"group-by on join output: {int(g_cnt)} groups")
+def main():
+    # -- single TPC extracts: R join S, planner-selected algorithm ---------
+    for jid in ("J1", "J3", "J4"):
+        R, S, mode = relgen.generate_tpc(jid, scale=1 / 1024)
+        cat = Catalog({"R": R, "S": S})
+        plan = optimize(scan("R").join(scan("S"), key="k", mode=mode), cat)
+        T, count = plan.run()
+        join_line = next(l for l in plan.explain().splitlines() if "Join[" in l)
+        print(f"{jid}: |R|={R.num_rows} |S|={S.num_rows} -> {int(count)} rows")
+        print(f"    {join_line.strip()}")
+
+    # -- end-to-end: two joins + grouped aggregation + top-k ---------------
+    fact, dims, fks, dks = relgen.generate_star(1 << 15, 1 << 12, 2,
+                                                payloads_per_dim=1)
+    cat = Catalog({"fact": fact, "dim0": dims[0], "dim1": dims[1]})
+    q = (scan("fact")
+         .join(scan("dim0"), left_key="fk0", right_key="k0")
+         .join(scan("dim1"), left_key="fk1", right_key="k1")
+         .group_by("fk0", p1_0="sum")
+         .order_by("p1_0_sum", limit=8, descending=True))
+    plan = optimize(q, cat)
+    print("\nstar query:")
+    print(plan.explain())
+    G, g_cnt = plan.run()
+    print(f"top-8 of {int(g_cnt)} surviving rows; "
+          f"best group sum={int(jnp.max(G['p1_0_sum']))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite, runnable from any checkout with no env
-# setup (pyproject.toml's pythonpath handles src/; the explicit PYTHONPATH
-# below keeps the ROADMAP.md invocation working on pytest < 7 too).
+# Tier-1 CI: the full test suite + a smoke-scale benchmark pass, runnable
+# from any checkout with no env setup (pyproject.toml's pythonpath handles
+# src/; the explicit PYTHONPATH below keeps the ROADMAP.md invocation
+# working on pytest < 7 too).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Smoke-scale end-to-end benchmark (engine section only): catches benchmark
+# bitrot — a benchmark that no longer runs fails CI instead of rotting.
+REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run engine > /dev/null
+echo "ci: smoke-scale engine benchmark OK"

@@ -6,6 +6,8 @@ Subpackages (import side-effect free; nothing here touches jax device
 state):
 
   core      join/group-by algorithms, planner, memory model
+  engine    cost-based relational query engine (plan IR, statistics,
+            optimizer, jit executor) over core's operators
   kernels   Pallas kernels (interpret=True on CPU)
   dist      sharding rules, compressed collectives, pipeline parallelism
   models    architecture zoo over one template/forward/decode API

@@ -9,7 +9,8 @@ from .hash_join import (phj_join, phj_join_checked, phj_overflowed, hash32,
                         choose_partition_bits)
 from .nphj import nphj_join
 from .groupby import (group_aggregate, groupby_sort, groupby_partition_hash,
-                      groupby_scatter, groupby_sort_pallas)
+                      groupby_scatter, groupby_sort_pallas,
+                      choose_groupby_strategy)
 from .planner import JoinStats, choose_algorithm, choose_smj_pattern, PrimitiveProfile, predict_join_time
 from .memmodel import peak_memory, peak_memory_bytes, gfur_ledger, gftr_ledger
 from . import primitives
@@ -21,7 +22,7 @@ __all__ = [
     "phj_join", "phj_join_checked", "phj_overflowed", "hash32",
     "choose_partition_bits", "nphj_join",
     "group_aggregate", "groupby_sort", "groupby_partition_hash",
-    "groupby_scatter", "groupby_sort_pallas",
+    "groupby_scatter", "groupby_sort_pallas", "choose_groupby_strategy",
     "JoinStats", "choose_algorithm", "choose_smj_pattern",
     "PrimitiveProfile", "predict_join_time",
     "peak_memory", "peak_memory_bytes", "gfur_ledger", "gftr_ledger",

@@ -220,18 +220,38 @@ def groupby_scatter(
     aggs: dict[str, str],
     num_groups: int,
 ):
-    """Direct scatter aggregation for keys already in [0, num_groups) — the
+    """Direct scatter aggregation for keys in [0, num_groups) — the
     atomicAdd analogue. Unclustered writes; viable only when the accumulator
-    array stays cache/VMEM-resident."""
+    array stays cache/VMEM-resident. Out-of-domain keys (including
+    KEY_SENTINEL padding) are dropped, and — like the other strategies —
+    the output is compacted to a dense prefix (present groups in ascending
+    key order, rows >= valid_count are padding), so all strategies share
+    one (Table, valid_count) contract."""
     keys = table[key]
-    gid = jnp.clip(keys, 0, num_groups - 1).astype(jnp.int32)
-    counts = jax.ops.segment_sum(jnp.ones_like(gid), gid, num_segments=num_groups)
+    if not jnp.issubdtype(keys.dtype, jnp.integer):
+        raise TypeError(
+            f"scatter group-by needs integer keys, got {keys.dtype}; "
+            "float keys would be silently floored into merged groups")
+    in_domain = (keys >= 0) & (keys < num_groups)
+    gid = jnp.where(in_domain, keys, num_groups).astype(jnp.int32)
+    counts = jax.ops.segment_sum(
+        in_domain.astype(jnp.int32), gid, num_segments=num_groups + 1
+    )[:num_groups]
     present = counts > 0
-    out = {key: jnp.where(present, jnp.arange(num_groups, dtype=keys.dtype), KEY_SENTINEL)}
+    out = {key: jnp.arange(num_groups, dtype=keys.dtype)}
     for col, op in aggs.items():
-        acc = _seg_reduce(op, table[col], gid, num_groups)
+        vals = table[col]
+        if op in ("sum", "mean"):
+            vals = jnp.where(in_domain, vals, 0)
+        acc = _seg_reduce(op, vals, gid, num_groups + 1)[:num_groups]
         out[f"{col}_{op}"] = _finalize(op, acc, counts)
-    return Table(out), jnp.sum(present)
+    names = list(out)
+    compacted, n_present = prim.compact(present, [out[n] for n in names],
+                                        num_groups)
+    out = dict(zip(names, compacted))
+    out[key] = jnp.where(jnp.arange(num_groups) < n_present, out[key],
+                         jnp.asarray(KEY_SENTINEL, keys.dtype))
+    return Table(out), n_present
 
 
 def groupby_sort_pallas(
@@ -270,6 +290,57 @@ def groupby_sort_pallas(
         else:
             out[f"{col}_{op}"] = gs / jnp.maximum(gc, 1.0)
     return Table(out), count
+
+
+def choose_groupby_strategy(
+    n_rows: int,
+    est_groups: float,
+    *,
+    key_min: float | None = None,
+    key_max: float | None = None,
+    zipf: float = 0.0,
+    dense_domain_limit: int = 1 << 18,
+    integer_key: bool = True,
+) -> tuple[str, str]:
+    """Cardinality-based strategy heuristic, mirroring the paper's
+    hash/sort/partition guidance for grouped aggregation (and Fig. 18's
+    structure: pick the cheapest access pattern the distribution allows).
+
+    Returns (strategy, rationale):
+      * dense, small key domains -> 'scatter' (the accumulator array stays
+        cache/VMEM-resident, so the unclustered writes are cheap — the
+        atomicAdd-on-shared-memory regime);
+      * heavy duplication (rows >> groups) or skew -> 'partition_hash'
+        (tile-local pre-aggregation collapses duplicates before the
+        expensive pass, the shared-memory-hash-table regime);
+      * high cardinality -> 'sort' (one sequential sort pass beats hash
+        tables that spill out of fast memory — the GFTR insight).
+    """
+    domain = None
+    # scatter indexes the accumulator by key value, so the keys must be
+    # non-negative integers in a small domain
+    if (integer_key and key_min is not None and key_max is not None
+            and key_min >= 0):
+        domain = int(key_max) + 1
+    if domain is not None and domain <= dense_domain_limit and domain <= max(
+        4 * est_groups, 1024
+    ):
+        return "scatter", (
+            f"dense key domain [0, {domain}) fits a resident accumulator"
+        )
+    if zipf > 1.0:
+        return "partition_hash", (
+            f"skewed keys (zipf~{zipf:.2f}): tile pre-aggregation absorbs "
+            "heavy hitters"
+        )
+    if est_groups * 8 <= n_rows:
+        return "partition_hash", (
+            f"rows/groups ~ {n_rows / max(est_groups, 1.0):.0f}x: tile "
+            "pre-aggregation shrinks the combine pass"
+        )
+    return "sort", (
+        "high cardinality: sequential sort pass beats spilling hash tables"
+    )
 
 
 def group_aggregate(

@@ -46,6 +46,12 @@ def hash32(x: jax.Array) -> jax.Array:
     return x
 
 
+# default padded-block capacity per build partition; rows of ONE key beyond
+# this cannot be separated by more partition bits (duplicates co-hash), so
+# m:n joins with heavier per-key multiplicity must use sort-merge instead
+BUILD_BLOCK = 256
+
+
 def choose_partition_bits(n_build: int, build_block: int) -> int:
     """Fan-out so that E[partition size] <= build_block/4 (overflow of the
     padded block becomes negligible for hashed keys)."""
@@ -145,7 +151,7 @@ def phj_join(
     pattern: str = "gftr",  # "gftr" (PHJ-OM) | "gfur" (PHJ-UM)
     out_size: int | None = None,
     mode: str = "pk_fk",
-    build_block: int = 256,
+    build_block: int = BUILD_BLOCK,
     partition_bits: int | None = None,
     hash_keys: bool = True,
     reuse_transform_perm: bool = False,

@@ -85,6 +85,59 @@ class PrimitiveProfile:
     unclustered_penalty: float = 20.0  # effective slowdown per random-gathered byte
     clustered_penalty: float = 1.3
 
+    @classmethod
+    def measure(cls, n: int = 1 << 16, key_bytes: int = 4, iters: int = 3,
+                warmup: int = 1) -> "PrimitiveProfile":
+        """Calibrate the profile from timed device microbenchmarks (§5.4:
+        "profile the primitives beforehand").
+
+        Times a sequential stream, a SORT-PAIRS, and clustered/unclustered
+        GATHERs at `n` rows on the local device, then backs the four model
+        constants out of the measured wall times. Penalties are clamped so
+        the model stays physical (unclustered >= clustered >= 1) even when a
+        host LLC blunts the random-access gap at small `n`.
+        """
+        import time
+
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def timed(f, *args):
+            f = jax.jit(f)
+            for _ in range(warmup):
+                jax.block_until_ready(f(*args))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(*args))
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            return max(ts[len(ts) // 2], 1e-9)
+
+        rng = np.random.default_rng(0)
+        kdt = jnp.int32 if key_bytes <= 4 else jnp.int64
+        keys = jnp.asarray(rng.permutation(n)).astype(kdt)
+        vals = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+        idx_seq = jnp.arange(n, dtype=jnp.int32)
+        idx_rand = jnp.asarray(rng.permutation(n).astype(np.int32))
+
+        # Sequential stream: read + write n*4 bytes each.
+        t_seq = timed(lambda v: v + 1, vals)
+        seq_bw = 2 * n * 4 / t_seq
+        # SORT-PAIRS: charge the LSD pass structure the cost model assumes.
+        passes = prim.num_radix_passes(8 * key_bytes)
+        t_sort = timed(lambda k, v: prim.sort_pairs(k, v), keys, vals)
+        sort_pass_bw = passes * n * (key_bytes + 4) * 2 / t_sort
+        # GATHER: effective slowdown per gathered byte vs the sequential BW.
+        gather_bytes = n * 4
+        t_clu = timed(lambda v, i: jnp.take(v, i, axis=0), vals, idx_seq)
+        t_unc = timed(lambda v, i: jnp.take(v, i, axis=0), vals, idx_rand)
+        clustered = max(t_clu * seq_bw / gather_bytes, 1.0)
+        unclustered = max(t_unc * seq_bw / gather_bytes, clustered)
+        return cls(seq_bw=seq_bw, sort_pass_bw=sort_pass_bw,
+                   unclustered_penalty=unclustered, clustered_penalty=clustered)
+
     def sort_cost(self, n, key_b, val_b):
         passes = prim.num_radix_passes(8 * key_b)  # 8 bits/pass over key width
         return passes * n * (key_b + val_b) * 2 / self.sort_pass_bw

@@ -1,0 +1,46 @@
+"""repro.engine — a cost-based relational query engine over the join /
+group-by operator library (the paper's "query optimizer" layer, built out).
+
+Four modules close the loop from declarative query to device execution:
+
+  logical    dataclass plan IR + fluent builder (scan/filter/join/...)
+  stats      table statistics & cardinality estimation (distinct sketches,
+             match-ratio and zipf estimates from device-side samples) —
+             synthesizes the `JoinStats` the planner consumes
+  physical   optimizer: greedy join ordering on estimated cardinalities,
+             Fig. 18 algorithm/pattern selection + §5.4 cost model per
+             join, group-by strategy choice, static capacity propagation;
+             `explain()` renders choices + predicted cost
+  executor   jit-compatible interpreter running the physical plan over
+             `Table`s
+
+Typical use::
+
+    from repro.engine import Catalog, scan, optimize
+
+    cat = Catalog({"fact": fact, "dim0": dim0, "dim1": dim1})
+    q = (scan("fact")
+         .join(scan("dim0"), left_key="fk0", right_key="k0")
+         .join(scan("dim1"), left_key="fk1", right_key="k1")
+         .group_by("fk0", payload="sum"))
+    plan = optimize(q, cat)          # engine-estimated stats, no JoinStats
+    print(plan.explain())            # per-op algorithm/pattern + cost
+    result, count = plan.run()       # executes under jax.jit
+"""
+from .logical import (Plan, Scan, Filter, Project, Join, GroupBy,
+                      OrderByLimit, scan, output_columns)
+from .stats import (Catalog, ColumnStats, TableStats, collect_table_stats,
+                    estimate_distinct, estimate_match_ratio, estimate_zipf,
+                    estimate_selectivity, synthesize_join_stats)
+from .physical import (Optimizer, PhysicalPlan, optimize, calibrated_profile)
+from .executor import execute, run
+
+__all__ = [
+    "Plan", "Scan", "Filter", "Project", "Join", "GroupBy", "OrderByLimit",
+    "scan", "output_columns",
+    "Catalog", "ColumnStats", "TableStats", "collect_table_stats",
+    "estimate_distinct", "estimate_match_ratio", "estimate_zipf",
+    "estimate_selectivity", "synthesize_join_stats",
+    "Optimizer", "PhysicalPlan", "optimize", "calibrated_profile",
+    "execute", "run",
+]

@@ -1,0 +1,127 @@
+"""Physical-plan interpreter over `core` operators — jit-compatible.
+
+All plan structure (operator order, algorithms, capacities) is Python-side
+and static; only the tables flow through as traced pytrees, so the whole
+plan compiles as one XLA program:
+
+    compiled = jax.jit(lambda tables: execute(plan.root, tables))
+
+Every operator follows the repo's static-shape contract (DESIGN.md §2):
+it consumes and produces `(Table-with-capacity, valid_count)` pairs. Rows
+at index >= count are padding; before each key-consuming operator the key
+column is re-masked to KEY_SENTINEL so padding can never match or form a
+group. Filters compact survivors to the front, which preserves the
+clustering GFTR relies on (`primitives.compact` is stable).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import group_aggregate, join
+from repro.core import primitives as prim
+from repro.core.table import KEY_SENTINEL, Table
+
+from . import physical as P
+from .logical import FILTER_OP_FNS
+
+
+def _valid_mask(table: Table, count) -> jax.Array:
+    return jnp.arange(table.num_rows, dtype=jnp.int32) < count
+
+
+def _mask_key(table: Table, count, key: str) -> Table:
+    """Force padding rows' key to KEY_SENTINEL so joins/group-bys drop them."""
+    k = table[key]
+    masked = jnp.where(_valid_mask(table, count), k,
+                       jnp.asarray(KEY_SENTINEL, k.dtype))
+    return table.with_columns(**{key: masked})
+
+
+def execute(node: P.PhysNode, tables: Mapping[str, Table]):
+    """Interpret the plan bottom-up. Returns (Table, valid_count)."""
+    if isinstance(node, P.PScan):
+        t = tables[node.table]
+        return t, jnp.asarray(t.num_rows, jnp.int32)
+    if isinstance(node, P.PFilter):
+        return _filter(node, tables)
+    if isinstance(node, P.PProject):
+        t, count = execute(node.child, tables)
+        return t.select(node.columns), count
+    if isinstance(node, P.PJoin):
+        return _join(node, tables)
+    if isinstance(node, P.PGroupBy):
+        return _group_by(node, tables)
+    if isinstance(node, P.POrderByLimit):
+        return _order_by(node, tables)
+    raise TypeError(f"unknown physical node {type(node).__name__}")
+
+
+def _filter(node: P.PFilter, tables):
+    t, count = execute(node.child, tables)
+    mask = FILTER_OP_FNS[node.op](t[node.column], node.value) & _valid_mask(t, count)
+    names = t.column_names
+    outs, new_count = prim.compact(mask, [t[n] for n in names], node.capacity)
+    return Table(dict(zip(names, outs))), new_count
+
+
+def _join(node: P.PJoin, tables):
+    bt, b_count = execute(node.build, tables)
+    pt, p_count = execute(node.probe, tables)
+    bt = _mask_key(bt, b_count, node.build_key)
+    pt = _mask_key(pt, p_count, node.probe_key)
+    # core.join wants one shared key name: align build's key to the probe's
+    if node.build_key != node.probe_key:
+        bt = bt.rename({node.build_key: node.probe_key})
+    out, count = join(
+        bt, pt, key=node.probe_key, algorithm=node.algorithm,
+        pattern=node.pattern, out_size=node.capacity, mode=node.mode,
+    )
+    if node.build_key != node.probe_key:
+        # restore the equal-valued alias column (schema contract)
+        out = out.with_columns(**{node.build_key: out[node.probe_key]})
+    return out, count
+
+
+def _group_by(node: P.PGroupBy, tables):
+    t, count = execute(node.child, tables)
+    t = _mask_key(t, count, node.key)
+    return group_aggregate(
+        t.select((node.key,) + tuple(c for c, _ in node.aggs)),
+        key=node.key, aggs=dict(node.aggs), num_groups=node.capacity,
+        strategy=node.strategy,
+    )
+
+
+def _order_by(node: P.POrderByLimit, tables):
+    t, count = execute(node.child, tables)
+    k = t[node.key]
+    if node.descending:
+        # bitwise complement reverses integer order without the INT_MIN
+        # overflow of arithmetic negation; floats negate safely
+        k = ~k if jnp.issubdtype(k.dtype, jnp.integer) else -k
+    # validity is the primary sort key, so padding rows land strictly after
+    # every valid row no matter what values they carry
+    invalid = (~_valid_mask(t, count)).astype(jnp.int32)
+    iota = jnp.arange(t.num_rows, dtype=jnp.int32)
+    _, _, perm = jax.lax.sort((invalid, k, iota), num_keys=2, is_stable=True)
+    # slice the permutation before gathering: top-k needs a capacity-length
+    # gather, not a full-table copy of every column
+    out = t.take(perm[:node.capacity])
+    return out, jnp.minimum(count, node.capacity)
+
+
+def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
+        *, jit: bool = True):
+    """Execute a PhysicalPlan. `tables` defaults to the catalog's; pass new
+    same-shape tables to reuse one compiled plan across datasets. The jitted
+    executor is cached on the plan, so repeated `run()` calls trace and
+    compile once."""
+    tables = dict(tables if tables is not None else plan.catalog.tables)
+    if not jit:
+        return execute(plan.root, tables)
+    if plan.compiled is None:
+        plan.compiled = jax.jit(lambda tb: execute(plan.root, tb))
+    return plan.compiled(tables)

@@ -1,0 +1,714 @@
+"""Physical planner: logical plan + estimated statistics -> executable plan.
+
+The optimizer closes the loop the paper leaves to "the query optimizer":
+
+  * **Join ordering** — maximal Join subtrees are flattened into a join
+    graph and re-ordered greedily on estimated output cardinality (smallest
+    intermediate first), emitting a left-deep tree.
+  * **Build-side selection** — the side whose key is *provably* unique
+    (exact base-column check + no upstream fan-out, see `_key_is_unique`)
+    becomes the build/PK side; if neither side qualifies the join runs in
+    m:n mode, which is correct for any multiplicity.
+  * **Algorithm + pattern per join** — the paper's Fig. 18 decision tree
+    (`core.planner.choose_algorithm`) over a `JoinStats` synthesized from
+    the statistics layer (no hand-written descriptors), with the §5.4
+    primitive-profile cost model pricing each phase.
+  * **Group-by strategy** — `core.groupby.choose_groupby_strategy` on
+    estimated group cardinality, key-domain density, and skew.
+  * **Capacity propagation** — every operator gets a static output
+    capacity (estimate x safety margin, rounded up) so the executor stays
+    jit-compatible end to end.
+
+`PhysicalPlan.explain()` renders the tree with per-operator choice,
+estimated rows, capacity, and predicted cost; `PhysicalPlan.run()` hands
+the plan to `engine.executor`.
+
+The cost model profile is **calibrated by default** from timed device
+microbenchmarks (`PrimitiveProfile.measure()`, cached per process), with
+the hard-coded v5e constants as fallback if measurement fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.groupby import choose_groupby_strategy
+from repro.core.hash_join import BUILD_BLOCK
+from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm,
+                                choose_smj_pattern, predict_join_time)
+
+from . import logical as L
+from . import stats as S
+
+_PROFILE_CACHE: PrimitiveProfile | None = None
+
+
+def calibrated_profile(n: int = 1 << 16) -> PrimitiveProfile:
+    """Measured primitive profile (cached per process); falls back to the
+    built-in v5e constants when the microbenchmarks cannot run."""
+    global _PROFILE_CACHE
+    if _PROFILE_CACHE is None:
+        try:
+            _PROFILE_CACHE = PrimitiveProfile.measure(n=n)
+        except Exception:  # noqa: BLE001 — any device/timer failure
+            _PROFILE_CACHE = PrimitiveProfile()
+    return _PROFILE_CACHE
+
+
+def _round_capacity(est: float, safety: float, lo: int = 64,
+                    hi: int | None = None) -> int:
+    cap = max(int(math.ceil(est * safety)), lo)
+    cap = -(-cap // 64) * 64  # multiple of 64 keeps shapes lane-friendly
+    if hi is not None:
+        cap = min(cap, max(hi, lo))
+    return cap
+
+
+class LazyStats:
+    """Lazy column-stats mapping: resolves a column to `stats.ColumnStats`
+    on first access and caches it. Keeps wide tables cheap — only columns a
+    plan consults (keys, filter columns) ever get sketched."""
+
+    def __init__(self, resolve, columns):
+        self._resolve = resolve
+        self._cols = frozenset(columns)
+        self._cache = {}
+
+    def get(self, col, default=None):
+        if col not in self._cols:
+            return default
+        if col not in self._cache:
+            self._cache[col] = self._resolve(col)
+        return self._cache[col] if self._cache[col] is not None else default
+
+    def __contains__(self, col):
+        return self.get(col) is not None
+
+    def __getitem__(self, col):
+        v = self.get(col)
+        if v is None:
+            raise KeyError(col)
+        return v
+
+
+# ---------------------------------------------------------------------------
+# Physical nodes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PhysNode:
+    est_rows: float
+    capacity: int
+    cost: float  # predicted seconds for this operator alone
+    columns: tuple[str, ...]
+    col_stats: dict  # column -> stats.ColumnStats (propagated estimates)
+    origins: dict  # column -> (base_table, base_column) | None
+    # uniqueness bookkeeping for sound pk_fk classification:
+    #   may_repeat   — columns whose rows may have been duplicated by an
+    #                  upstream join fan-out (base uniqueness no longer holds)
+    #   known_unique — columns distinct-valued by construction (group keys)
+    may_repeat: frozenset = frozenset()
+    known_unique: frozenset = frozenset()
+
+    def children(self) -> tuple["PhysNode", ...]:
+        return ()
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class PScan(PhysNode):
+    table: str = ""
+
+    def describe(self):
+        return f"Scan[{self.table}] rows={int(self.est_rows)}"
+
+
+@dataclasses.dataclass
+class PFilter(PhysNode):
+    child: PhysNode = None
+    column: str = ""
+    op: str = "=="
+    value: float = 0.0
+    selectivity: float = 1.0
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self):
+        return (f"Filter[{self.column} {self.op} {self.value}] "
+                f"sel~{self.selectivity:.2f} est~{int(self.est_rows)} "
+                f"cap={self.capacity} cost={self.cost*1e6:.0f}us")
+
+
+@dataclasses.dataclass
+class PProject(PhysNode):
+    child: PhysNode = None
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self):
+        return f"Project[{', '.join(self.columns)}]"
+
+
+@dataclasses.dataclass
+class PJoin(PhysNode):
+    build: PhysNode = None
+    probe: PhysNode = None
+    build_key: str = ""
+    probe_key: str = ""
+    out_key: str = ""
+    mode: str = "pk_fk"
+    algorithm: str = "phj"
+    pattern: str = "gftr"
+    rationale: str = ""
+    join_stats: JoinStats | None = None
+    phase_times: dict | None = None
+
+    def children(self):
+        return (self.build, self.probe)
+
+    def describe(self):
+        tag = f"{self.algorithm.upper()}-{'OM' if self.pattern == 'gftr' else 'UM'}"
+        return (f"Join[{tag} {self.mode}] key={self.out_key} "
+                f"mr~{self.join_stats.match_ratio:.2f} est~{int(self.est_rows)} "
+                f"cap={self.capacity} cost={self.cost*1e6:.0f}us "
+                f"why: {self.rationale}")
+
+
+@dataclasses.dataclass
+class PGroupBy(PhysNode):
+    child: PhysNode = None
+    key: str = ""
+    aggs: tuple = ()
+    strategy: str = "sort"
+    rationale: str = ""
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self):
+        a = ", ".join(f"{op}({c})" for c, op in self.aggs)
+        return (f"GroupBy[{self.strategy}] key={self.key} aggs=({a}) "
+                f"groups~{int(self.est_rows)} cap={self.capacity} "
+                f"cost={self.cost*1e6:.0f}us why: {self.rationale}")
+
+
+@dataclasses.dataclass
+class POrderByLimit(PhysNode):
+    child: PhysNode = None
+    key: str = ""
+    limit: int = 0
+    descending: bool = False
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self):
+        d = "desc" if self.descending else "asc"
+        return (f"OrderByLimit[{self.key} {d} limit={self.limit}] "
+                f"cost={self.cost*1e6:.0f}us")
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    root: PhysNode
+    catalog: "S.Catalog"
+    total_cost: float
+    compiled: object = dataclasses.field(default=None, repr=False, compare=False)
+
+    def explain(self) -> str:
+        lines = [f"physical plan  predicted_total={self.total_cost*1e6:.0f}us"]
+
+        def walk(node, prefix, is_last, label=""):
+            branch = "└─ " if is_last else "├─ "
+            lab = f"{label}: " if label else ""
+            lines.append(prefix + branch + lab + node.describe())
+            ext = "   " if is_last else "│  "
+            kids = node.children()
+            labels = (
+                ("build", "probe") if isinstance(node, PJoin) else ("",) * len(kids)
+            )
+            for i, (k, klab) in enumerate(zip(kids, labels)):
+                walk(k, prefix + ext, i == len(kids) - 1, klab)
+
+        walk(self.root, "", True)
+        return "\n".join(lines)
+
+    def run(self, tables: Mapping | None = None, *, jit: bool = True):
+        """Execute over `tables` (default: the catalog's). Returns
+        (Table, valid_count)."""
+        from . import executor
+
+        return executor.run(self, tables, jit=jit)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+class Optimizer:
+    def __init__(self, catalog: "S.Catalog", *, profile: PrimitiveProfile | None = None,
+                 safety: float = 1.5, measure_profile: bool = True,
+                 force_join: tuple[str, str] | None = None):
+        self.catalog = catalog
+        self.profile = profile or (
+            calibrated_profile() if measure_profile else PrimitiveProfile()
+        )
+        self.safety = safety
+        self.force_join = force_join
+
+    # -- entry --------------------------------------------------------------
+    def optimize(self, plan: L.Plan) -> PhysicalPlan:
+        # validate the whole tree up front (raises on bad references)
+        L.output_columns(plan, self.catalog.schemas())
+        root = self._build(plan)
+        total = self._sum_cost(root)
+        return PhysicalPlan(root=root, catalog=self.catalog, total_cost=total)
+
+    def _sum_cost(self, node: PhysNode) -> float:
+        return node.cost + sum(self._sum_cost(c) for c in node.children())
+
+    # -- per-node construction ----------------------------------------------
+    def _build(self, node: L.Plan) -> PhysNode:
+        if isinstance(node, L.Scan):
+            return self._scan(node)
+        if isinstance(node, L.Filter):
+            return self._filter(node)
+        if isinstance(node, L.Project):
+            return self._project(node)
+        if isinstance(node, L.Join):
+            return self._join_tree(node)
+        if isinstance(node, L.GroupBy):
+            return self._group_by(node)
+        if isinstance(node, L.OrderByLimit):
+            return self._order_by(node)
+        raise TypeError(f"unknown plan node {type(node).__name__}")
+
+    def _scan(self, node: L.Scan) -> PScan:
+        t = self.catalog.tables[node.table]
+        name = node.table
+        return PScan(
+            est_rows=float(t.num_rows), capacity=t.num_rows, cost=0.0,
+            columns=tuple(t.column_names),
+            col_stats=LazyStats(lambda c: self.catalog.col_stats(name, c),
+                                t.column_names),
+            origins={c: (name, c) for c in t.column_names},
+            table=name,
+        )
+
+    def _filter(self, node: L.Filter) -> PFilter:
+        child = self._build(node.child)
+        origin = child.origins.get(node.column)
+        chain = self._scan_chain(child)
+        if (origin is not None and chain is not None
+                and chain[0] == origin[0]):
+            # Scan->Filter* chain: size from the JOINT selectivity of the
+            # whole chain on one aligned base sample — independent
+            # per-predicate estimates multiply correlated predicates into
+            # an underestimate that would truncate survivors.
+            preds = chain[1] + ((node.column, node.op, node.value),)
+            joint = self.catalog.selectivity(chain[0], preds)
+            base_rows = float(self.catalog.tables[chain[0]].num_rows)
+            est = base_rows * joint
+            sel = est / max(child.est_rows, 1.0)
+            cap = _round_capacity(est, self.safety, hi=child.capacity)
+        else:
+            # The child reshaped the row distribution (join/group-by) or
+            # the column is derived: a base-table sample is wrong-weighted
+            # (e.g. groups vs rows under skew), so it may guide cost and
+            # ordering but must NOT shrink the capacity — compact would
+            # silently drop survivors beyond it.
+            if origin is not None:
+                col = self.catalog.tables[origin[0]][origin[1]]
+                sel = S.estimate_selectivity(col, node.op, node.value)
+            else:
+                sel = 0.33
+            est = child.est_rows * sel
+            cap = child.capacity
+        # one streaming pass over all columns (mask + compact)
+        nbytes = child.capacity * 4 * max(len(child.columns), 1)
+        cost = 2 * nbytes / self.profile.seq_bw
+        return PFilter(
+            est_rows=est, capacity=cap, cost=cost, columns=child.columns,
+            col_stats=child.col_stats, origins=child.origins,
+            may_repeat=child.may_repeat, known_unique=child.known_unique,
+            child=child, column=node.column, op=node.op, value=node.value,
+            selectivity=sel,
+        )
+
+    def _project(self, node: L.Project) -> PProject:
+        child = self._build(node.child)
+        cols = frozenset(node.columns)
+        return PProject(
+            est_rows=child.est_rows, capacity=child.capacity, cost=0.0,
+            columns=tuple(node.columns),
+            col_stats=LazyStats(child.col_stats.get, node.columns),
+            origins={c: child.origins.get(c) for c in node.columns},
+            may_repeat=child.may_repeat & cols,
+            known_unique=child.known_unique & cols,
+            child=child,
+        )
+
+    # -- joins: flatten, greedy-order, pick algorithms ----------------------
+    def _join_tree(self, node: L.Join) -> PhysNode:
+        rels, edges = self._flatten(node)
+        phys = [self._build(r) for r in rels]
+        if not edges:
+            return phys[0]
+        # greedy: cheapest edge first, then cheapest extension of the
+        # connected intermediate
+        est_cache = {}
+
+        def edge_est(i, cur, j, e):
+            key = (i, id(cur), j)
+            if key not in est_cache:
+                est_cache[key] = self._estimate_join(cur, phys[j], e)
+            return est_cache[key]
+
+        remaining = list(range(len(edges)))
+        # seed: globally cheapest edge (the chosen edge's oriented spec is
+        # reused by _make_join rather than recomputed)
+        seeds = {ei: self._estimate_join(phys[edges[ei][0]],
+                                         phys[edges[ei][1]], edges[ei])
+                 for ei in remaining}
+        seed = min(remaining, key=lambda ei: seeds[ei][0])
+        li, ri, lk, rk, mode = edges[seed]
+        cur = self._make_join(spec=seeds[seed][1])
+        joined = {li, ri}
+        remaining.remove(seed)
+        while remaining:
+            best, best_est = None, None
+            for ei in remaining:
+                li, ri, lk, rk, mode = edges[ei]
+                if li in joined:
+                    est = edge_est(ei, cur, ri, (li, ri, lk, rk, mode))
+                elif ri in joined:
+                    est = edge_est(ei, cur, li, (li, ri, lk, rk, mode))
+                else:
+                    continue
+                if best_est is None or est[0] < best_est[0]:
+                    best, best_est = ei, est
+            if best is None:  # cannot happen: a Join tree's edge set is connected
+                raise ValueError("disconnected join graph")
+            li, ri = edges[best][0], edges[best][1]
+            remaining.remove(best)
+            cur = self._make_join(spec=best_est[1])
+            joined.add(ri if li in joined else li)
+        return cur
+
+    def _flatten(self, node: L.Plan):
+        """Maximal Join subtree -> (leaf relations, edges). Edge =
+        (left_rel_idx, right_rel_idx, left_key, right_key, mode)."""
+        schemas = self.catalog.schemas()
+        if not isinstance(node, L.Join):
+            return [node], []
+        lrels, ledges = self._flatten(node.left)
+        rrels, redges = self._flatten(node.right)
+        off = len(lrels)
+        edges = ledges + [(a + off, b + off, lk, rk, m)
+                          for a, b, lk, rk, m in redges]
+        rels = lrels + rrels
+
+        def owner(rel_list, base, key):
+            for i, r in enumerate(rel_list):
+                if key in L.output_columns(r, schemas):
+                    return base + i
+            raise KeyError(f"join key {key!r} not found in any input relation")
+
+        li = owner(lrels, 0, node.left_key)
+        ri = owner(rrels, off, node.right_key)
+        edges.append((li, ri, node.left_key, node.right_key, node.mode))
+        return rels, edges
+
+    def _estimate_join(self, a: PhysNode, b: PhysNode, edge):
+        """(estimated output rows, oriented spec) for joining phys nodes a
+        (carrying edge key ka) and b (carrying kb)."""
+        li, ri, lk, rk, mode = edge
+        ka = lk if lk in a.columns else rk
+        kb = rk if rk in b.columns else lk
+        spec = self._orient(a, ka, b, kb, mode)
+        return spec["est"], spec
+
+    def _key_is_unique(self, node: PhysNode, col: str) -> bool:
+        """PROOF, not estimate, that `col` is distinct-valued in `node`:
+        either unique by construction (group key), or its base column is
+        exactly unique (Catalog.is_unique) and no upstream join fan-out
+        duplicated the rows carrying it. A sketch-based guess here would
+        silently drop duplicate matches through the pk_fk path."""
+        if col in node.known_unique:
+            return True
+        if col in node.may_repeat:
+            return False
+        origin = node.origins.get(col)
+        return origin is not None and self.catalog.is_unique(*origin)
+
+    def _scan_chain(self, node: PhysNode):
+        """If `node` is a pure Scan -> Filter*/Project* chain over one base
+        table (no row duplication or truncation), return (table, predicate
+        chain) so estimators can push the predicates into base-row samples;
+        else None."""
+        preds = []
+        cur = node
+        while True:
+            if isinstance(cur, PScan):
+                return cur.table, tuple(preds)
+            if isinstance(cur, PFilter):
+                preds.append((cur.column, cur.op, cur.value))
+                cur = cur.child
+            elif isinstance(cur, PProject):
+                cur = cur.child
+            else:
+                return None
+
+    def _orient(self, a: PhysNode, ka: str, b: PhysNode, kb: str, mode: str):
+        """Decide build vs probe side + estimate match ratio / output."""
+        a_u, b_u = self._key_is_unique(a, ka), self._key_is_unique(b, kb)
+        if mode == "pk_fk" and not (a_u or b_u):
+            raise ValueError(
+                f"join forced to pk_fk but neither key column ({ka!r}, {kb!r}) "
+                "is provably unique")
+        if mode == "mn" or not (a_u or b_u):
+            mode_r = "mn"
+            build, bk, probe, pk = ((a, ka, b, kb)
+                                    if a.est_rows <= b.est_rows
+                                    else (b, kb, a, ka))
+        else:
+            mode_r = "pk_fk"
+            if a_u and b_u:
+                build, bk, probe, pk = ((a, ka, b, kb)
+                                        if a.est_rows <= b.est_rows
+                                        else (b, kb, a, ka))
+            elif a_u:
+                build, bk, probe, pk = a, ka, b, kb
+            else:
+                build, bk, probe, pk = b, kb, a, ka
+
+        o_b, o_p = build.origins.get(bk), probe.origins.get(pk)
+        if o_b is not None and o_p is not None:
+            # Push the probe side's filter chain into the sample when it is
+            # a plain Scan->Filter* chain: a predicate correlated with match
+            # likelihood then yields the POST-filter match ratio instead of
+            # base-mr x selectivity (which double-counts the restriction
+            # and under-sizes the output).
+            chain = self._scan_chain(probe)
+            preds = chain[1] if chain is not None and chain[0] == o_p[0] else ()
+            mr = self.catalog.match_ratio(o_b, o_p, preds)
+            # A filtered build side can only LOSE keys, so the unscaled mr
+            # is an upper bound — safe for capacity, slightly conservative
+            # for ordering. (Scaling by row retention is wrong for GroupBy
+            # builds; scaling distinct by selectivity is wrong for
+            # duplicated keys — both under-size the output.)
+        else:
+            mr = 0.8  # derived key columns: assume mostly-matching
+        mr = min(max(mr, 0.0), 1.0)
+        p_stats = probe.col_stats.get(pk)
+        zipf = p_stats.zipf if p_stats is not None else 0.0
+        if mode_r == "pk_fk":
+            est = probe.est_rows * mr
+        else:
+            # m:n sizing must be an upper bound, or the static capacity
+            # silently truncates. Three regimes per side:
+            #   Scan->Filter* chain  -> exact masked count is computable
+            #   anything else        -> the side may have been fanned out,
+            #                           so base-table counts UNDERcount;
+            #                           bound via the other side's exact
+            #                           max multiplicity, or fully
+            #                           pessimistically when neither is
+            #                           provable.
+            def side_chain(n, origin):
+                ch = self._scan_chain(n)
+                ok = (ch is not None and origin is not None
+                      and ch[0] == origin[0])
+                return ch[1] if ok else None
+
+            b_preds = side_chain(build, o_b)
+            p_preds = side_chain(probe, o_p)
+            if b_preds is not None and p_preds is not None:
+                est = self.catalog.mn_output_rows(o_b, o_p, b_preds, p_preds)
+            elif b_preds is not None:
+                est = probe.est_rows * self.catalog.max_multiplicity(o_b, b_preds)
+            elif p_preds is not None:
+                est = build.est_rows * self.catalog.max_multiplicity(o_p, p_preds)
+            else:
+                est = build.est_rows * probe.est_rows  # worst case
+        return dict(build=build, build_key=bk, probe=probe, probe_key=pk,
+                    mode=mode_r, match_ratio=mr, zipf=zipf, est=est)
+
+    def _make_join(self, a: PhysNode = None, b: PhysNode = None,
+                   lk: str = None, rk: str = None, mode: str = "auto",
+                   spec: dict | None = None) -> PJoin:
+        if spec is None:
+            ka = lk if lk in a.columns else rk
+            kb = rk if rk in b.columns else lk
+            spec = self._orient(a, ka, b, kb, mode)
+        build, probe = spec["build"], spec["probe"]
+        bk, pk = spec["build_key"], spec["probe_key"]
+        jstats = S.synthesize_join_stats(
+            n_build=max(int(build.est_rows), 1),
+            n_probe=max(int(probe.est_rows), 1),
+            build_payload_cols=len(build.columns) - 1,
+            probe_payload_cols=len(probe.columns) - 1,
+            match_ratio=spec["match_ratio"],
+            zipf=spec["zipf"],
+            key_dtype=self._dtype_of(build, bk),
+            payload_dtypes=[self._dtype_of(n, c)
+                            for n in (build, probe)
+                            for c in n.columns if c not in (bk, pk)],
+        )
+        if self.force_join is not None:
+            alg, pattern = self.force_join
+            rationale = "forced baseline"
+        else:
+            alg, pattern, rationale = choose_algorithm(jstats)
+            if spec["mode"] == "mn" and alg == "phj":
+                # PHJ pads each build co-partition to BUILD_BLOCK rows, and
+                # duplicates of one key co-hash no matter the fan-out: a
+                # heavier per-key multiplicity overflows the block and
+                # silently drops matches. Merge join has no such bound.
+                chain = self._scan_chain(build)
+                o_bk = build.origins.get(bk)
+                if (chain is not None and o_bk is not None
+                        and chain[0] == o_bk[0]):
+                    mult = self.catalog.max_multiplicity(o_bk, chain[1])
+                else:
+                    mult = float("inf")  # not provable: be safe
+                if mult > BUILD_BLOCK:
+                    alg = "smj"
+                    pattern, _ = choose_smj_pattern(jstats)
+                    rationale = (
+                        f"m:n build multiplicity {mult:.0f} exceeds PHJ's "
+                        f"{BUILD_BLOCK}-row co-partition block -> SMJ")
+        phases = predict_join_time(jstats, alg, pattern, self.profile)
+        est = spec["est"]
+        hi = probe.capacity if spec["mode"] == "pk_fk" else None
+        cap = _round_capacity(est, self.safety, hi=hi)
+        # Output schema: probe-side key name carries the join key; the
+        # build-side key name stays as an equal-valued alias (see
+        # logical.output_columns). Payload names must be disjoint.
+        out_key = pk
+        shared = set(build.columns) & set(probe.columns)
+        allowed = {bk} if bk == pk else set()
+        if shared - allowed:
+            raise ValueError(f"join column name collision: {sorted(shared - allowed)}")
+        columns = tuple(probe.columns) + tuple(
+            c for c in build.columns if c not in shared
+        )
+        origins = {}
+        for side in (build, probe):
+            for c in side.columns:
+                origins[c] = side.origins.get(c)
+        # BOTH key columns now carry the probe-surviving key values, so both
+        # must trace to the probe's base column — leaving the alias pointed
+        # at the (unique) build base column would let a later join "prove"
+        # the duplicated values unique and drop matches via pk_fk.
+        origins[out_key] = probe.origins.get(pk)
+        origins[bk] = probe.origins.get(pk)
+
+        # both key columns now hold the matched (probe-surviving) key values
+        def _resolve(c, _b=build, _p=probe, _bk=bk, _pk=pk):
+            if c in (_pk, _bk):
+                ks = _p.col_stats.get(_pk)
+                return ks if ks is not None else _b.col_stats.get(_bk)
+            if c in _b.columns:
+                return _b.col_stats.get(c)
+            return _p.col_stats.get(c)
+
+        col_stats = LazyStats(_resolve, columns)
+        # uniqueness propagation: pk_fk emits <= 1 row per probe row, so
+        # probe-side columns keep their uniqueness; build rows can fan out.
+        # The build-key alias carries the probe key's values/multiplicity.
+        if spec["mode"] == "pk_fk":
+            may_repeat = (probe.may_repeat
+                          | (frozenset(build.columns) - {bk}))
+            known_unique = probe.known_unique & frozenset(probe.columns)
+            if pk in probe.known_unique:
+                known_unique |= {bk}
+            elif pk in probe.may_repeat:
+                may_repeat |= {bk}
+        else:
+            may_repeat = frozenset(columns)
+            known_unique = frozenset()
+        return PJoin(
+            est_rows=est, capacity=cap, cost=phases["total"], columns=columns,
+            col_stats=col_stats, origins=origins,
+            may_repeat=may_repeat, known_unique=known_unique,
+            build=build, probe=probe, build_key=bk, probe_key=pk,
+            out_key=out_key, mode=spec["mode"], algorithm=alg, pattern=pattern,
+            rationale=rationale, join_stats=jstats, phase_times=phases,
+        )
+
+    def _dtype_of(self, node: PhysNode, col: str):
+        origin = node.origins.get(col)
+        if origin is not None:
+            return self.catalog.tables[origin[0]][origin[1]].dtype
+        return "int32"
+
+    # -- group-by / order-by ------------------------------------------------
+    def _group_by(self, node: L.GroupBy) -> PGroupBy:
+        child = self._build(node.child)
+        ks = child.col_stats.get(node.key)
+        est_groups = min(ks.distinct if ks else child.est_rows, child.est_rows)
+        # scatter indexes the accumulator BY key value: only provably
+        # integer keys qualify (int32-casting floats would merge groups)
+        origin = child.origins.get(node.key)
+        integer_key = origin is not None and np.issubdtype(
+            np.dtype(self.catalog.tables[origin[0]][origin[1]].dtype),
+            np.integer)
+        strategy, rationale = choose_groupby_strategy(
+            int(child.est_rows), est_groups,
+            key_min=ks.min if ks else None,
+            key_max=ks.max if ks else None,
+            zipf=ks.zipf if ks else 0.0,
+            integer_key=integer_key,
+        )
+        if strategy == "scatter":
+            # scatter needs the accumulator to cover the dense domain
+            cap = _round_capacity(float(ks.max) + 1, 1.0)
+        else:
+            cap = _round_capacity(est_groups, self.safety)
+        n, kb, vb = child.capacity, 4, 4
+        p = self.profile
+        if strategy == "sort":
+            cost = len(node.aggs) * p.sort_cost(n, kb, vb)
+        elif strategy == "partition_hash":
+            # tile-partial pass (sequential) + combine sort over ~n/4 partials
+            cost = (2 * n * (kb + vb) / p.seq_bw
+                    + len(node.aggs) * p.sort_cost(max(n // 4, 1), kb, vb))
+        else:  # scatter
+            cost = len(node.aggs) * p.gather_cost(n, vb, clustered=False)
+        col_stats = {node.key: ks} if ks else {}
+        return PGroupBy(
+            est_rows=min(est_groups, cap), capacity=cap, cost=cost,
+            columns=(node.key,) + tuple(f"{c}_{op}" for c, op in node.aggs),
+            col_stats=col_stats,
+            origins={node.key: child.origins.get(node.key)},
+            known_unique=frozenset({node.key}),  # one row per group
+            child=child, key=node.key, aggs=tuple(node.aggs),
+            strategy=strategy, rationale=rationale,
+        )
+
+    def _order_by(self, node: L.OrderByLimit) -> POrderByLimit:
+        child = self._build(node.child)
+        cap = min(node.limit, child.capacity)
+        cost = self.profile.sort_cost(child.capacity, 4, 4 * len(child.columns))
+        return POrderByLimit(
+            est_rows=min(child.est_rows, node.limit), capacity=cap, cost=cost,
+            columns=child.columns, col_stats=child.col_stats,
+            origins=dict(child.origins), may_repeat=child.may_repeat,
+            known_unique=child.known_unique, child=child, key=node.key,
+            limit=node.limit, descending=node.descending,
+        )
+
+
+def optimize(plan: L.Plan, catalog: "S.Catalog", *,
+             profile: PrimitiveProfile | None = None, safety: float = 1.5,
+             measure_profile: bool = True,
+             force_join: tuple[str, str] | None = None) -> PhysicalPlan:
+    """Optimize a logical plan against a catalog. See module docstring."""
+    return Optimizer(catalog, profile=profile, safety=safety,
+                     measure_profile=measure_profile,
+                     force_join=force_join).optimize(plan)

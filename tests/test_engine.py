@@ -1,0 +1,574 @@
+"""Query-engine end-to-end tests: logical API -> engine-estimated stats ->
+optimized physical plan -> jit execution, checked against NumPy references.
+
+Payload sums use wraparound-aware comparison where relgen payloads (~2^31)
+can overflow the device's int32 accumulators."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.table import KEY_SENTINEL, Table
+from repro.data import relgen
+from repro.engine import (Catalog, optimize, output_columns, scan)
+from repro.engine import logical as L
+
+# profile measurement is exercised in test_planner; keep these tests fast
+OPT = dict(measure_profile=False)
+
+
+def _rows(table: Table, count, cols):
+    """Valid rows as a sorted list of tuples (order-insensitive compare)."""
+    n = int(count)
+    mat = [np.asarray(table[c])[:n] for c in cols]
+    return sorted(zip(*[m.tolist() for m in mat]))
+
+
+# ---------------------------------------------------------------------------
+# Logical IR
+# ---------------------------------------------------------------------------
+def test_fluent_api_builds_expected_tree():
+    q = (scan("fact")
+         .join(scan("dim"), left_key="fk", right_key="k")
+         .group_by("fk", p="sum")
+         .order_by("p_sum", limit=5, descending=True))
+    assert isinstance(q, L.OrderByLimit)
+    assert isinstance(q.child, L.GroupBy)
+    assert isinstance(q.child.child, L.Join)
+    assert q.child.child.left_key == "fk"
+
+
+def test_output_columns_validates_references():
+    schemas = {"a": ("k", "x"), "b": ("k", "y")}
+    q = scan("a").join(scan("b"), key="k")
+    assert set(output_columns(q, schemas)) == {"k", "x", "y"}
+    with pytest.raises(KeyError):
+        output_columns(scan("a").filter("nope", "<", 1), schemas)
+    with pytest.raises(ValueError):
+        # payload collision: both sides carry x
+        output_columns(scan("a").join(scan("a"), key="k"), schemas)
+    with pytest.raises(ValueError):
+        scan("a").filter("x", "~~", 3)
+
+
+# ---------------------------------------------------------------------------
+# Single join, estimated match ratio, vs NumPy reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("match_ratio", [1.0, 0.5])
+def test_single_join_matches_numpy(match_ratio):
+    w = relgen.JoinWorkload("t", 4000, 8000, 2, 1, match_ratio=match_ratio)
+    R, S = relgen.generate(w)
+    cat = Catalog({"R": R, "S": S})
+    plan = optimize(scan("R").join(scan("S"), key="k"), cat, **OPT)
+    T, count = plan.run()
+
+    rmap = {int(k): (int(a), int(b))
+            for k, a, b in zip(*map(np.asarray, (R["k"], R["r1"], R["r2"])))}
+    ref = sorted(
+        (int(k), *rmap[int(k)], int(s))
+        for k, s in zip(np.asarray(S["k"]), np.asarray(S["s1"]))
+        if int(k) in rmap
+    )
+    assert abs(int(count) - len(ref)) == 0
+    assert _rows(T, count, ("k", "r1", "r2", "s1")) == ref
+    # the planner sized the output from its own estimate, not worst case
+    root = plan.root
+    assert root.capacity >= len(ref)
+    assert root.join_stats.match_ratio == pytest.approx(match_ratio, abs=0.1)
+
+
+def test_join_alias_keeps_both_key_columns():
+    fact, dims, _, _ = relgen.generate_star(2000, 500, 1)
+    cat = Catalog({"fact": fact, "dim0": dims[0]})
+    plan = optimize(
+        scan("fact").join(scan("dim0"), left_key="fk0", right_key="k0"),
+        cat, **OPT)
+    T, count = plan.run()
+    assert "fk0" in T.column_names and "k0" in T.column_names
+    n = int(count)
+    np.testing.assert_array_equal(np.asarray(T["fk0"])[:n],
+                                  np.asarray(T["k0"])[:n])
+
+
+# ---------------------------------------------------------------------------
+# The acceptance query: two joins + grouped aggregation, under jit
+# ---------------------------------------------------------------------------
+def test_two_joins_plus_groupby_matches_numpy_under_jit():
+    fact, dims, fks, dks = relgen.generate_star(20_000, 4000, 2,
+                                                payloads_per_dim=1, seed=3)
+    cat = Catalog({"fact": fact, "dim0": dims[0], "dim1": dims[1]})
+    q = (scan("fact")
+         .join(scan("dim0"), left_key="fk0", right_key="k0")
+         .join(scan("dim1"), left_key="fk1", right_key="k1")
+         .group_by("fk0", p1_0="sum", p0_0="count"))
+    plan = optimize(q, cat, **OPT)
+
+    # explain() reports per-operator algorithm, pattern, and predicted cost
+    text = plan.explain()
+    assert "GroupBy[" in text and "Join[" in text
+    assert ("-OM" in text) or ("-UM" in text)
+    assert "cost=" in text and "why:" in text
+    assert plan.total_cost > 0
+
+    # executes under jax.jit (jit=True is the default path)
+    G, cnt = plan.run(jit=True)
+
+    # NumPy reference
+    f = {k: np.asarray(v) for k, v in fact.columns.items()}
+    d1 = {k: np.asarray(v) for k, v in dims[1].columns.items()}
+    p1_of = dict(zip(d1["k1"].tolist(), d1["p1_0"].tolist()))
+    ref_sum, ref_cnt = {}, {}
+    for k, fk1 in zip(f["fk0"].tolist(), f["fk1"].tolist()):
+        ref_sum[k] = ref_sum.get(k, 0) + p1_of[fk1]
+        ref_cnt[k] = ref_cnt.get(k, 0) + 1
+    assert int(cnt) == len(ref_sum)
+
+    ks = np.asarray(G["fk0"])
+    sums = np.asarray(G["p1_0_sum"])
+    cnts = np.asarray(G["p0_0_count"])
+    seen = 0
+    for i in range(len(ks)):
+        k = int(ks[i])
+        if k == KEY_SENTINEL:
+            continue
+        seen += 1
+        assert (int(sums[i]) - ref_sum[k]) % (1 << 32) == 0, k  # int32 wrap
+        assert int(cnts[i]) == ref_cnt[k], k
+    assert seen == len(ref_sum)
+
+
+def test_plan_reuse_across_same_shape_tables():
+    """One optimized plan runs over fresh same-shape tables (serving reuse)."""
+    w = relgen.JoinWorkload("t", 2000, 4000, 1, 1)
+    R1, S1 = relgen.generate(w)
+    R2, S2 = relgen.generate(relgen.JoinWorkload("t", 2000, 4000, 1, 1, seed=9))
+    cat = Catalog({"R": R1, "S": S1})
+    plan = optimize(scan("R").join(scan("S"), key="k"), cat, **OPT)
+    _, c1 = plan.run()
+    _, c2 = plan.run({"R": R2, "S": S2})
+    assert int(c1) == 4000 and int(c2) == 4000
+
+
+# ---------------------------------------------------------------------------
+# Filter, project, order-by-limit through the executor
+# ---------------------------------------------------------------------------
+def test_filter_then_join_matches_numpy():
+    w = relgen.JoinWorkload("t", 3000, 6000, 1, 1)
+    R, S = relgen.generate(w)
+    thresh = int(np.median(np.asarray(S["s1"])))
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").filter("s1", "<", thresh).join(scan("R"), key="k")
+    plan = optimize(q, cat, **OPT)
+    T, count = plan.run()
+
+    rmap = dict(zip(np.asarray(R["k"]).tolist(), np.asarray(R["r1"]).tolist()))
+    ref = sorted(
+        (int(k), int(s), rmap[int(k)])
+        for k, s in zip(np.asarray(S["k"]), np.asarray(S["s1"]))
+        if int(s) < thresh and int(k) in rmap
+    )
+    assert _rows(T, count, ("k", "s1", "r1")) == ref
+    # the filter's capacity came from the sampled selectivity, not |S|
+    assert plan.root.probe.capacity < S.num_rows
+
+
+def test_project_and_order_by_limit():
+    rng = np.random.default_rng(5)
+    vals = rng.permutation(1000).astype(np.int32)
+    t = Table({"k": jnp.arange(1000, dtype=jnp.int32), "v": jnp.asarray(vals),
+               "w": jnp.zeros(1000, jnp.int32)})
+    cat = Catalog({"t": t})
+    q = scan("t").project("k", "v").order_by("v", limit=10, descending=True)
+    plan = optimize(q, cat, **OPT)
+    T, count = plan.run()
+    assert int(count) == 10
+    assert set(T.column_names) == {"k", "v"}
+    got = np.asarray(T["v"])[:10]
+    np.testing.assert_array_equal(got, np.sort(vals)[::-1][:10])
+
+
+def test_filter_on_derived_column_keeps_all_survivors():
+    """Selectivity of a derived (aggregate) column cannot be sampled; the
+    capacity must not shrink, or survivors would be silently dropped."""
+    rng = np.random.default_rng(11)
+    t = Table({"k": jnp.asarray(rng.integers(0, 300, 5000).astype(np.int32)),
+               "v": jnp.ones(5000, jnp.float32)})
+    cat = Catalog({"t": t})
+    # every group sum is positive -> every group survives the filter
+    q = scan("t").group_by("k", v="sum").filter("v_sum", ">", 0.0)
+    plan = optimize(q, cat, **OPT)
+    _, count = plan.run()
+    assert int(count) == len(set(np.asarray(t["k"]).tolist()))
+
+
+def test_auto_join_with_duplicate_build_keys_uses_mn():
+    """~10% duplicated keys on the smaller side: a sketch would still call
+    it 'unique' and lose the duplicate matches through the pk_fk path; the
+    exact check must route this to m:n and keep every match."""
+    rng = np.random.default_rng(13)
+    keys = np.arange(900, dtype=np.int32)
+    keys = np.concatenate([keys, keys[:100]])  # 10% duplicates
+    rng.shuffle(keys)
+    R = Table({"k": jnp.asarray(keys),
+               "r": jnp.asarray(np.arange(1000, dtype=np.int32))})
+    skeys = rng.integers(0, 900, 3000).astype(np.int32)
+    S = Table({"k": jnp.asarray(skeys),
+               "s": jnp.asarray(np.arange(3000, dtype=np.int32))})
+    cat = Catalog({"R": R, "S": S})
+    plan = optimize(scan("R").join(scan("S"), key="k"), cat, safety=2.0, **OPT)
+    assert plan.root.mode == "mn"
+    _, count = plan.run()
+    counts_r = np.bincount(keys, minlength=900)
+    ref_n = int(sum(counts_r[k] for k in skeys))
+    assert int(count) == ref_n
+
+
+def test_run_caches_compiled_plan():
+    w = relgen.JoinWorkload("t", 1000, 2000, 1, 1)
+    R, S = relgen.generate(w)
+    cat = Catalog({"R": R, "S": S})
+    plan = optimize(scan("R").join(scan("S"), key="k"), cat, **OPT)
+    assert plan.compiled is None
+    plan.run()
+    first = plan.compiled
+    assert first is not None
+    plan.run()
+    assert plan.compiled is first  # no re-trace on repeated runs
+
+
+def test_mn_join_matches_numpy():
+    rng = np.random.default_rng(7)
+    ka = rng.integers(0, 50, 400).astype(np.int32)
+    kb = rng.integers(0, 50, 600).astype(np.int32)
+    A = Table({"k": jnp.asarray(ka), "a": jnp.asarray(np.arange(400, dtype=np.int32))})
+    B = Table({"k": jnp.asarray(kb), "b": jnp.asarray(np.arange(600, dtype=np.int32))})
+    cat = Catalog({"A": A, "B": B})
+    plan = optimize(scan("A").join(scan("B"), key="k", mode="mn"), cat,
+                    safety=2.0, **OPT)
+    assert plan.root.mode == "mn"
+    T, count = plan.run()
+    ref = sorted((int(k), int(a), int(b))
+                 for k, a in zip(ka, range(400))
+                 for k2, b in zip(kb, range(600)) if k == k2)
+    assert _rows(T, count, ("k", "a", "b")) == ref
+
+
+def test_scatter_groupby_composes_with_downstream_ops():
+    """Scatter output must be a dense prefix like the other strategies:
+    with holes in the key domain (only even keys), a downstream top-k must
+    still see every real group, not the first `count` domain slots."""
+    keys = np.repeat(np.arange(0, 64, 2, dtype=np.int32), 4)  # evens only
+    t = Table({"k": jnp.asarray(keys), "v": jnp.asarray(keys.astype(np.float32))})
+    cat = Catalog({"t": t})
+    plan = optimize(
+        scan("t").group_by("k", v="sum").order_by("v_sum", limit=5,
+                                                  descending=True),
+        cat, **OPT)
+    assert plan.root.child.strategy == "scatter"
+    T, count = plan.run()
+    assert int(count) == 5
+    # ground truth: largest keys have the largest sums (sum = 4*k)
+    np.testing.assert_array_equal(np.asarray(T["k"])[:5], [62, 60, 58, 56, 54])
+    np.testing.assert_array_equal(np.asarray(T["v_sum"])[:5],
+                                  [248.0, 240.0, 232.0, 224.0, 216.0])
+
+
+def test_order_by_descending_int_min_overflow_safe():
+    """Arithmetic negation wraps INT32_MIN back onto itself; the executor
+    must not return the column minimum as the top-1."""
+    vals = np.array([5, -2147483648, 17, 3], dtype=np.int32)
+    t = Table({"k": jnp.arange(4, dtype=jnp.int32), "v": jnp.asarray(vals)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").order_by("v", limit=2, descending=True), cat, **OPT)
+    T, count = plan.run()
+    np.testing.assert_array_equal(np.asarray(T["v"])[:2], [17, 5])
+
+
+def test_mn_join_correlated_multiplicity_not_truncated():
+    """A heavy-hitter key breaks the independence cardinality estimate by
+    orders of magnitude; the exact base-column estimator must size the
+    capacity so no matches are dropped."""
+    rng = np.random.default_rng(17)
+    bkeys = np.concatenate([np.arange(100, dtype=np.int32),
+                            np.zeros(400, dtype=np.int32)])  # key 0: 401 rows
+    rng.shuffle(bkeys)
+    pkeys = np.zeros(200, dtype=np.int32)  # every probe row hits key 0
+    A = Table({"k": jnp.asarray(bkeys), "a": jnp.arange(500, dtype=jnp.int32)})
+    B = Table({"k": jnp.asarray(pkeys), "b": jnp.arange(200, dtype=jnp.int32)})
+    cat = Catalog({"A": A, "B": B})
+    plan = optimize(scan("A").join(scan("B"), key="k"), cat, **OPT)
+    assert plan.root.mode == "mn"
+    ref_n = 200 * 401
+    assert plan.root.capacity >= ref_n  # independence estimate would give ~24k
+    _, count = plan.run()
+    assert int(count) == ref_n
+
+
+def test_groupby_build_side_keeps_full_match_ratio():
+    """A GroupBy shrinks rows but keeps every key value: the retention
+    scaling must use the distinct-count ratio, not the row ratio, or the
+    join capacity collapses by rows/groups and truncates the output."""
+    rng = np.random.default_rng(19)
+    detail_keys = np.repeat(np.arange(2000, dtype=np.int32), 10)  # 10 rows/key
+    rng.shuffle(detail_keys)
+    detail = Table({"k": jnp.asarray(detail_keys),
+                    "v": jnp.ones(20_000, jnp.float32)})
+    probe_keys = rng.integers(0, 2000, 30_000).astype(np.int32)
+    probe = Table({"k": jnp.asarray(probe_keys),
+                   "p": jnp.arange(30_000, dtype=jnp.int32)})
+    cat = Catalog({"detail": detail, "probe": probe})
+    q = scan("detail").group_by("k", v="sum").join(scan("probe"), key="k")
+    plan = optimize(q, cat, **OPT)
+    _, count = plan.run()
+    assert int(count) == 30_000  # every probe row matches a group
+
+
+def test_groupby_float_keys_never_scatter():
+    """Float keys would be int-floored by the scatter accumulator, merging
+    distinct groups; the planner must route them to a sort-based strategy."""
+    rng = np.random.default_rng(23)
+    fkeys = (rng.integers(0, 500, 20_000).astype(np.float32) / 50.0)  # [0,10)
+    t = Table({"k": jnp.asarray(fkeys), "v": jnp.ones(20_000, jnp.float32)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").group_by("k", v="sum"), cat, **OPT)
+    assert plan.root.strategy != "scatter"
+    _, count = plan.run()
+    assert int(count) == len(set(fkeys.tolist()))
+
+
+def test_correlated_filter_and_join_not_truncated():
+    """A probe filter perfectly correlated with match likelihood: base
+    match ratio (0.1) x filter selectivity (0.1) would size the capacity
+    100x too small; predicate pushdown into the match-ratio sample must
+    recover the post-filter ratio (~1.0)."""
+    rng = np.random.default_rng(29)
+    bkeys = np.arange(1000, dtype=np.int32)
+    probe_keys = rng.integers(0, 10_000, 50_000).astype(np.int32)
+    R = Table({"k": jnp.asarray(bkeys), "r": jnp.asarray(bkeys * 2)})
+    S = Table({"k": jnp.asarray(probe_keys),
+               "s": jnp.arange(50_000, dtype=jnp.int32)})
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").filter("k", "<", 1000).join(scan("R"), key="k")
+    plan = optimize(q, cat, **OPT)
+    ref_n = int(np.sum(probe_keys < 1000))
+    assert plan.root.capacity >= ref_n
+    _, count = plan.run()
+    assert int(count) == ref_n
+
+
+def test_stacked_correlated_filters_not_truncated():
+    """Two filters selecting the SAME rows: joint sampling must not
+    multiply their selectivities (0.25 vs 0.5)."""
+    vals = np.arange(10_000, dtype=np.int32)
+    t = Table({"k": jnp.asarray(vals), "v": jnp.asarray(vals)})
+    cat = Catalog({"t": t})
+    q = scan("t").filter("k", "<", 5000).filter("v", "<", 5000)
+    plan = optimize(q, cat, **OPT)
+    assert plan.root.capacity >= 5000
+    _, count = plan.run()
+    assert int(count) == 5000
+
+
+def test_join_alias_origin_does_not_fake_uniqueness():
+    """After a pk_fk join, the build-key alias holds duplicated probe
+    values; its origin must point at the probe base column, or a later
+    join 'proves' it unique and drops duplicate matches via pk_fk."""
+    rng = np.random.default_rng(31)
+    fact = Table({"fk": jnp.asarray(rng.integers(0, 100, 1000).astype(np.int32)),
+                  "f": jnp.arange(1000, dtype=jnp.int32)})
+    dim = Table({"kd": jnp.arange(100, dtype=jnp.int32),
+                 "d": jnp.arange(100, dtype=jnp.int32) * 3})
+    # T: 2 rows per key -> the second join must expand, not dedupe
+    tkeys = np.repeat(np.arange(100, dtype=np.int32), 2)
+    T = Table({"kt": jnp.asarray(tkeys), "t": jnp.arange(200, dtype=jnp.int32)})
+    cat = Catalog({"fact": fact, "dim": dim, "T": T})
+    # the filter breaks join-tree flattening, forcing the outer join to see
+    # the intermediate as one side
+    q = (scan("fact")
+         .join(scan("dim"), left_key="fk", right_key="kd")
+         .filter("f", ">=", 0)
+         .join(scan("T"), left_key="kd", right_key="kt"))
+    plan = optimize(q, cat, safety=2.0, **OPT)
+    _, count = plan.run()
+    assert int(count) == 2000  # 1000 fact rows x 2 T rows per key
+
+
+def test_filtered_duplicated_keys_groupby_keeps_all_groups():
+    """Filter keeps ~10% of rows but ~every key survives (each key has
+    ~100 rows): the group capacity must not shrink by the selectivity."""
+    rng = np.random.default_rng(37)
+    keys = rng.integers(0, 1000, 100_000).astype(np.int32) * 1000  # sparse
+    sel_col = rng.integers(0, 10, 100_000).astype(np.int32)
+    t = Table({"k": jnp.asarray(keys), "f": jnp.asarray(sel_col),
+               "v": jnp.ones(100_000, jnp.float32)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").filter("f", "==", 3).group_by("k", v="sum"),
+                    cat, **OPT)
+    _, count = plan.run()
+    ref = len(set(keys[sel_col == 3].tolist()))
+    assert int(count) == ref
+
+
+def test_filter_after_groupby_under_skew_not_truncated():
+    """Group-by reshapes the row distribution: a base-row sample says 10%
+    (heavy key 0 dominates rows) but ~all GROUPS pass the filter; the
+    capacity must not shrink from the wrong-weighted sample."""
+    keys = np.concatenate([np.zeros(9000, dtype=np.int32),
+                           np.arange(1, 1000, dtype=np.int32)])
+    t = Table({"k": jnp.asarray(keys), "v": jnp.ones(keys.size, jnp.float32)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").group_by("k", v="sum").filter("k", ">=", 1),
+                    cat, **OPT)
+    _, count = plan.run()
+    assert int(count) == 999
+
+
+def test_mn_join_with_correlated_filter_not_truncated():
+    """A filter that selects exactly the heavy-multiplicity rows: uniform
+    retention scaling of the exact m:n count would be 10x short; the
+    predicate must be pushed into the exact count."""
+    a_keys = np.concatenate([np.arange(1, 10_000 - 999, dtype=np.int32),
+                             np.zeros(1000, dtype=np.int32)])
+    flag = (a_keys == 0).astype(np.int32)
+    A = Table({"k": jnp.asarray(a_keys), "flag": jnp.asarray(flag),
+               "a": jnp.arange(a_keys.size, dtype=jnp.int32)})
+    b_keys = np.zeros(1000, dtype=np.int32)
+    B = Table({"k": jnp.asarray(b_keys), "b": jnp.arange(1000, dtype=jnp.int32)})
+    cat = Catalog({"A": A, "B": B})
+    q = scan("A").filter("flag", "==", 1).join(scan("B"), key="k", mode="mn")
+    plan = optimize(q, cat, **OPT)
+    ref_n = 1000 * 1000
+    assert plan.root.capacity >= ref_n
+    _, count = plan.run()
+    assert int(count) == ref_n
+
+
+def test_chained_mn_joins_account_for_fanout():
+    """The second m:n join's build side is a fanned-out intermediate: base
+    -table counts undercount it, so the bound must come from the other
+    side's multiplicity (or worst case), not the base tables."""
+    A = Table({"k": jnp.asarray(np.array([0] * 5 + [1, 2, 3, 4, 5], np.int32)),
+               "a": jnp.arange(10, dtype=jnp.int32)})
+    B = Table({"k": jnp.asarray(np.array([0] * 4 + [1, 2, 3, 4, 5, 6], np.int32)),
+               "b": jnp.arange(10, dtype=jnp.int32)})
+    C = Table({"k": jnp.asarray(np.array([0] * 3 + [1, 2], np.int32)),
+               "c": jnp.arange(5, dtype=jnp.int32)})
+    cat = Catalog({"A": A, "B": B, "C": C})
+    q = (scan("A").join(scan("B"), key="k", mode="mn")
+         .filter("a", ">=", 0)  # breaks flattening: C joins the intermediate
+         .join(scan("C"), key="k", mode="mn"))
+    plan = optimize(q, cat, **OPT)
+    ka = np.array([0] * 5 + [1, 2, 3, 4, 5])
+    kb = np.array([0] * 4 + [1, 2, 3, 4, 5, 6])
+    kc = np.array([0] * 3 + [1, 2])
+    ref_n = sum(int((ka == k).sum() * (kb == k).sum() * (kc == k).sum())
+                for k in range(7))
+    _, count = plan.run()
+    assert int(count) == ref_n
+
+
+def test_register_invalidates_mn_cardinality_cache():
+    """Re-registering a table must drop its cached m:n counts, or a plan
+    over the new data reuses stale (smaller) capacities."""
+    A1 = Table({"k": jnp.zeros(10, jnp.int32), "a": jnp.arange(10, dtype=jnp.int32)})
+    B = Table({"k": jnp.zeros(10, jnp.int32), "b": jnp.arange(10, dtype=jnp.int32)})
+    cat = Catalog({"A": A1, "B": B})
+    q = scan("A").join(scan("B"), key="k", mode="mn")
+    p1 = optimize(q, cat, **OPT)
+    assert p1.root.capacity >= 100
+    A2 = Table({"k": jnp.zeros(40, jnp.int32), "a": jnp.arange(40, dtype=jnp.int32)})
+    cat.register("A", A2)
+    p2 = optimize(q, cat, **OPT)
+    assert p2.root.capacity >= 400  # stale cache would keep ~100
+    _, count = p2.run()
+    assert int(count) == 400
+
+
+def test_catalog_memoizes_match_ratio():
+    fact, dims, _, _ = relgen.generate_star(5000, 1000, 2)
+    cat = Catalog({"fact": fact, "dim0": dims[0], "dim1": dims[1]})
+    q = (scan("fact")
+         .join(scan("dim0"), left_key="fk0", right_key="k0")
+         .join(scan("dim1"), left_key="fk1", right_key="k1"))
+    optimize(q, cat, **OPT)
+    # one estimate per distinct base-column pair, despite the greedy loop
+    # and _make_join re-asking
+    assert len(cat._mr) == 2, sorted(cat._mr)
+    optimize(q, cat, **OPT)  # re-planning reuses every pair estimate
+    assert len(cat._mr) == 2
+
+
+def test_lazy_stats_skip_payload_columns():
+    """Only columns the plan consults (keys) get sketched; wide-table
+    payload columns must not pay for distinct/zipf sketches."""
+    fact, dims, _, _ = relgen.generate_star(5000, 1000, 1, payloads_per_dim=3)
+    cat = Catalog({"fact": fact, "dim0": dims[0]})
+    optimize(scan("fact").join(scan("dim0"), left_key="fk0", right_key="k0"),
+             cat, **OPT)
+    sketched = {c for _, c in cat._col_stats}
+    assert "fk0" in sketched or "k0" in sketched
+    assert not {"p0_0", "p0_1", "p0_2", "payload"} & sketched, sketched
+
+
+# ---------------------------------------------------------------------------
+# Optimizer decisions
+# ---------------------------------------------------------------------------
+def test_greedy_join_order_puts_selective_join_first():
+    """Dim0 joins away 90% of the fact rows; the optimizer must schedule it
+    before the non-selective dim1 join."""
+    n_fact, n_dim = 20_000, 2000
+    fact, dims, fks, dks = relgen.generate_star(n_fact, n_dim, 2, seed=1)
+    # make dim0 selective: keep only 10% of its keys
+    d0 = dims[0].head(n_dim // 10)
+    cat = Catalog({"fact": fact, "dim0": d0, "dim1": dims[1]})
+    q = (scan("fact")
+         .join(scan("dim1"), left_key="fk1", right_key="k1")  # user: bad order
+         .join(scan("dim0"), left_key="fk0", right_key="k0"))
+    plan = optimize(q, cat, **OPT)
+    # inner (first-executed) join must be the selective dim0 one
+    inner = plan.root.probe if hasattr(plan.root, "probe") else None
+    assert inner is not None
+    assert plan.root.build.table == "dim1"  # outer joins the big dim last
+    assert inner.build.table == "dim0"
+    # and the result is still correct
+    T, count = plan.run()
+    f = {k: np.asarray(v) for k, v in fact.columns.items()}
+    keep = set(np.asarray(d0["k0"]).tolist())
+    ref_n = sum(1 for x in f["fk0"].tolist() if x in keep)
+    assert int(count) == ref_n
+
+
+def test_forced_baseline_overrides_choice():
+    w = relgen.JoinWorkload("t", 2000, 4000, 2, 2)
+    R, S = relgen.generate(w)
+    cat = Catalog({"R": R, "S": S})
+    q = scan("R").join(scan("S"), key="k")
+    planned = optimize(q, cat, **OPT)
+    forced = optimize(q, cat, force_join=("smj", "gfur"), **OPT)
+    assert forced.root.algorithm == "smj" and forced.root.pattern == "gfur"
+    t1, c1 = planned.run()
+    t2, c2 = forced.run()
+    assert int(c1) == int(c2)
+    cols = tuple(sorted(t1.column_names))
+    assert _rows(t1, c1, cols) == _rows(t2, c2, cols)
+
+
+def test_groupby_strategy_reacts_to_key_domain():
+    rng = np.random.default_rng(2)
+    dense = Table({"k": jnp.asarray(rng.integers(0, 256, 20_000).astype(np.int32)),
+                   "v": jnp.ones(20_000, jnp.float32)})
+    sparse_keys = (rng.integers(0, 1 << 30, 20_000)).astype(np.int32)
+    sparse = Table({"k": jnp.asarray(sparse_keys),
+                    "v": jnp.ones(20_000, jnp.float32)})
+    cat = Catalog({"dense": dense, "sparse": sparse})
+    p_dense = optimize(scan("dense").group_by("k", v="sum"), cat, **OPT)
+    p_sparse = optimize(scan("sparse").group_by("k", v="sum"), cat, **OPT)
+    assert p_dense.root.strategy == "scatter"
+    assert p_sparse.root.strategy == "sort"
+    # both produce correct group counts
+    _, c_dense = p_dense.run()
+    assert int(c_dense) == len(set(np.asarray(dense["k"]).tolist()))
+    _, c_sparse = p_sparse.run()
+    assert int(c_sparse) == len(set(sparse_keys.tolist()))

@@ -1,0 +1,171 @@
+"""Branch-complete planner tests (Fig. 18 decision trees, group-by
+chooser, profile calibration) + statistics estimators against known
+synthetic distributions from repro.data.relgen."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import JoinStats, choose_algorithm, choose_smj_pattern
+from repro.core.groupby import choose_groupby_strategy
+from repro.core.planner import PrimitiveProfile, predict_join_time
+from repro.data import relgen
+from repro.engine import stats as est
+
+
+# ---------------------------------------------------------------------------
+# Fig. 18a: choose_algorithm — one case per branch, in source order
+# ---------------------------------------------------------------------------
+ALG_BRANCHES = [
+    # (stats, expected (algorithm, pattern), rationale fragment)
+    (JoinStats(1000, 1000, 1, 1, match_ratio=0.1), ("phj", "gfur"), "narrow + low match"),
+    (JoinStats(1000, 1000, 1, 1), ("phj", "gftr"), "narrow"),
+    (JoinStats(1000, 1000, 3, 3, match_ratio=0.1), ("phj", "gfur"), "wide + low match"),
+    (JoinStats(1000, 1000, 3, 3, zipf=1.5), ("phj", "gftr"), "skewed FKs"),
+    (JoinStats(1000, 1000, 3, 3, key_bytes=8), ("phj", "gftr"), "8-byte"),
+    (JoinStats(1000, 1000, 3, 3, payload_bytes=8), ("phj", "gftr"), "8-byte"),
+    (JoinStats(1000, 1000, 3, 3), ("phj", "gftr"), "high match ratio"),
+]
+
+
+@pytest.mark.parametrize("st,expected,fragment", ALG_BRANCHES)
+def test_choose_algorithm_branches(st, expected, fragment):
+    alg, pattern, why = choose_algorithm(st)
+    assert (alg, pattern) == expected
+    assert fragment in why
+
+
+def test_choose_algorithm_branches_are_distinct():
+    """Every branch is actually reachable: the rationales must differ
+    across the non-duplicate cases."""
+    whys = {choose_algorithm(st)[2] for st, _, _ in ALG_BRANCHES}
+    assert len(whys) >= 5
+
+
+# ---------------------------------------------------------------------------
+# Fig. 18b: choose_smj_pattern — one case per branch
+# ---------------------------------------------------------------------------
+SMJ_BRANCHES = [
+    (JoinStats(1000, 1000, 1, 1), "gfur", "narrow"),
+    (JoinStats(1000, 1000, 3, 3, match_ratio=0.1), "gfur", "low match"),
+    (JoinStats(1000, 1000, 3, 3, key_bytes=8), "gfur", "8-byte"),
+    (JoinStats(1000, 1000, 3, 3, payload_bytes=8), "gfur", "8-byte"),
+    (JoinStats(1000, 1000, 3, 3, zipf=1.5), "gfur", "skew"),
+    (JoinStats(1000, 1000, 3, 3), "gftr", "wide + high match"),
+]
+
+
+@pytest.mark.parametrize("st,expected,fragment", SMJ_BRANCHES)
+def test_choose_smj_pattern_branches(st, expected, fragment):
+    pattern, why = choose_smj_pattern(st)
+    assert pattern == expected
+    assert fragment in why
+
+
+# ---------------------------------------------------------------------------
+# Group-by strategy chooser
+# ---------------------------------------------------------------------------
+def test_groupby_chooser_dense_domain_scatter():
+    s, why = choose_groupby_strategy(100_000, 1000, key_min=0, key_max=1023)
+    assert s == "scatter" and "dense" in why
+
+
+def test_groupby_chooser_skew_partition_hash():
+    s, why = choose_groupby_strategy(100_000, 50_000, zipf=1.5)
+    assert s == "partition_hash" and "skew" in why
+
+
+def test_groupby_chooser_duplication_partition_hash():
+    # sparse domain (negative mins disqualify scatter), heavy duplication
+    s, why = choose_groupby_strategy(100_000, 1000, key_min=-5, key_max=1 << 30)
+    assert s == "partition_hash"
+
+
+def test_groupby_chooser_high_cardinality_sort():
+    s, why = choose_groupby_strategy(100_000, 60_000, key_min=0, key_max=1 << 30)
+    assert s == "sort"
+
+
+# ---------------------------------------------------------------------------
+# PrimitiveProfile.measure — calibration sanity
+# ---------------------------------------------------------------------------
+def test_primitive_profile_measure():
+    prof = PrimitiveProfile.measure(n=1 << 14, iters=1, warmup=1)
+    for f in dataclasses.fields(prof):
+        v = getattr(prof, f.name)
+        assert np.isfinite(v) and v > 0, (f.name, v)
+    # model invariants the planner relies on
+    assert prof.unclustered_penalty >= prof.clustered_penalty >= 1.0
+    # the measured profile must price every phase of every pattern finitely
+    st = JoinStats(1 << 16, 1 << 17, 2, 2)
+    for pattern in ("gftr", "gfur"):
+        t = predict_join_time(st, "phj", pattern, prof)
+        assert t["total"] > 0 and np.isfinite(t["total"]), (pattern, t)
+
+
+# ---------------------------------------------------------------------------
+# Statistics estimators vs relgen ground truth
+# ---------------------------------------------------------------------------
+def test_distinct_estimate_unique_keys():
+    w = relgen.JoinWorkload("d", 20_000, 1000, 1, 1)
+    R, _ = relgen.generate(w)  # R keys are a permutation: exactly n distinct
+    d = est.estimate_distinct(R["k"])
+    assert abs(d - 20_000) / 20_000 < 0.12
+
+
+def test_distinct_estimate_duplicated_keys():
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 500, 50_000).astype(np.int32))
+    d = est.estimate_distinct(keys)
+    assert abs(d - 500) / 500 < 0.15
+
+
+def test_distinct_estimate_float_column():
+    """Floats must be bitcast before hashing — a value-cast would collapse
+    [0, 1) floats to a single bucket."""
+    rng = np.random.default_rng(3)
+    col = jnp.asarray(rng.random(20_000).astype(np.float32))  # ~all distinct
+    d = est.estimate_distinct(col)
+    assert abs(d - 20_000) / 20_000 < 0.12
+
+
+def test_match_ratio_estimate():
+    for mr in (1.0, 0.5, 0.1):
+        w = relgen.JoinWorkload("m", 30_000, 60_000, 1, 1, match_ratio=mr)
+        R, S = relgen.generate(w)
+        got = est.estimate_match_ratio(R["k"], S["k"])
+        assert abs(got - mr) < 0.08, (mr, got)
+
+
+def test_zipf_estimate_separates_skew_from_uniform():
+    w_u = relgen.JoinWorkload("u", 30_000, 60_000, 1, 1, zipf=0.0)
+    w_z = relgen.JoinWorkload("z", 30_000, 60_000, 1, 1, zipf=1.5)
+    _, S_u = relgen.generate(w_u)
+    _, S_z = relgen.generate(w_z)
+    z_u = est.estimate_zipf(S_u["k"])
+    z_z = est.estimate_zipf(S_z["k"])
+    assert z_u < 0.5, z_u
+    assert z_z > 0.8, z_z
+    assert z_z > z_u + 0.5
+
+
+def test_selectivity_estimate():
+    rng = np.random.default_rng(1)
+    col = jnp.asarray(rng.integers(0, 1000, 50_000).astype(np.int32))
+    sel = est.estimate_selectivity(col, "<", 250)
+    assert abs(sel - 0.25) < 0.05
+
+
+def test_synthesize_join_stats_dtypes():
+    js = est.synthesize_join_stats(
+        n_build=100, n_probe=200, build_payload_cols=2, probe_payload_cols=1,
+        match_ratio=0.5, zipf=1.2, key_dtype=jnp.int32,
+        payload_dtypes=[jnp.int32, jnp.int64],
+    )
+    assert js.key_bytes == 4 and js.payload_bytes == 8
+    assert js.n_r == 100 and js.n_s == 200 and js.wide
+    # and the synthesized stats drive the decision tree directly
+    assert choose_algorithm(js)[0] in ("phj", "smj", "nphj")
