@@ -60,3 +60,42 @@ def wide_payload():
                                       num_groups=2048, strategy=strat))
         us = time_fn(f, t)
         emit(f"groupby/wide4/{strat}", us, f"{n/(us/1e6)/1e6:.1f} Mrows/s")
+
+
+def partition_sweep():
+    """High-cardinality crossover: the partition-based algorithm vs sort vs
+    partition_hash as group count approaches row count (DESIGN.md §8).
+
+    Two readings per point. Measured wall time is what THIS container does —
+    XLA-on-CPU realizes every radix pass as a comparison sort, so the pass-
+    count asymmetry that favors partition on GPU/TPU radix hardware is
+    invisible and partition pays its blocked-aggregation overhead for
+    nothing. The `model` field prices the paper's pass structure with the
+    device profile (the same production-path/modeled-pass split as
+    sort_pairs vs radix_sort_pairs): partition's passes scale with
+    log2(partitions), sort's with the key width, which is the crossover the
+    engine's chooser acts on. The partition rows carry the modeled speedup
+    over sort at 4- and 8-byte keys."""
+    from repro.core import predict_groupby_time
+
+    n = 2 * N_BASE
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    for g in (4096, max(n // 8, 2), max(n // 2, 2)):
+        keys = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        t = Table({"k": keys, "v": vals})
+        distinct = int(jnp.sum(jnp.bincount(keys, length=g) > 0))
+        for strat in ("sort", "partition", "partition_hash"):
+            f = jax.jit(functools.partial(
+                group_aggregate, key="k", aggs={"v": "sum"},
+                num_groups=2 * distinct + 64, strategy=strat))
+            us = time_fn(f, t)
+            model_us = predict_groupby_time(n, 1, strat) * 1e6
+            derived = f"model {model_us:.0f}us; {n/(us/1e6)/1e6:.1f} Mrows/s"
+            if strat == "partition":
+                s4 = (predict_groupby_time(n, 1, "sort")
+                      / predict_groupby_time(n, 1, "partition"))
+                s8 = (predict_groupby_time(n, 1, "sort", key_bytes=8)
+                      / predict_groupby_time(n, 1, "partition", key_bytes=8))
+                derived += f"; model-vs-sort {s4:.2f}x (4B) {s8:.2f}x (8B)"
+            emit(f"groupby/partition/G{g}/{strat}", us, derived)

@@ -6,6 +6,10 @@ Runs either way:
     python -m benchmarks.run [section-prefix]
     python -m benchmarks.run --list      # print section tags, run nothing
 
+Whenever any ``groupby/*`` section runs, a machine-readable
+``BENCH_groupby.json`` ({name: us_per_call}) is written next to the CSV
+output (cwd) so successive PRs have a perf trajectory to regress against.
+
 Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
 runs use 2^27 rows — same code, larger constant)."""
 import os
@@ -50,6 +54,7 @@ def main() -> None:
         ("groupby/cardinality", groupby_bench.cardinality_sweep),
         ("groupby/skew", groupby_bench.skew_sweep),
         ("groupby/wide", groupby_bench.wide_payload),
+        ("groupby/partition", groupby_bench.partition_sweep),
         ("moe_dispatch", integration_bench.moe_dispatch),
         ("feature_pipeline", integration_bench.feature_join_pipeline),
         ("kernels", integration_bench.kernel_vs_xla),
@@ -70,6 +75,14 @@ def main() -> None:
         print(f"# --- {tag} ---")
         fn()
     print(f"# total_wall_s,{time.time()-t0:.1f},{len(ROWS)} rows")
+
+    groupby_rows = {name: us for name, us, _ in ROWS if name.startswith("groupby")}
+    if groupby_rows:
+        import json
+
+        with open("BENCH_groupby.json", "w") as f:
+            json.dump(groupby_rows, f, indent=2, sort_keys=True)
+        print(f"# wrote BENCH_groupby.json,{len(groupby_rows)},rows")
 
 
 if __name__ == "__main__":

@@ -13,3 +13,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run engine > /dev/null
 echo "ci: smoke-scale engine benchmark OK"
+
+# Smoke-scale partition-based group-by sweep: exercises the high-cardinality
+# strategy end to end and leaves BENCH_groupby.json (name -> us_per_call)
+# as the perf trajectory future PRs regress against.
+REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run groupby/partition > /dev/null
+test -s BENCH_groupby.json
+echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json)"

@@ -8,10 +8,14 @@ from .sort_merge import smj_join, merge_find_pk_fk, merge_find_mn
 from .hash_join import (phj_join, phj_join_checked, phj_overflowed, hash32,
                         choose_partition_bits)
 from .nphj import nphj_join
-from .groupby import (group_aggregate, groupby_sort, groupby_partition_hash,
-                      groupby_scatter, groupby_sort_pallas,
-                      choose_groupby_strategy)
-from .planner import JoinStats, choose_algorithm, choose_smj_pattern, PrimitiveProfile, predict_join_time
+from .groupby import (group_aggregate, groupby_sort, groupby_partition,
+                      groupby_partition_checked, groupby_partition_overflowed,
+                      groupby_partition_hash, groupby_scatter,
+                      groupby_sort_pallas, choose_groupby_strategy,
+                      choose_groupby_partition_bits)
+from .planner import (JoinStats, choose_algorithm, choose_smj_pattern,
+                      PrimitiveProfile, predict_join_time,
+                      predict_groupby_time)
 from .memmodel import peak_memory, peak_memory_bytes, gfur_ledger, gftr_ledger
 from . import primitives
 
@@ -21,10 +25,12 @@ __all__ = [
     "smj_join", "merge_find_pk_fk", "merge_find_mn",
     "phj_join", "phj_join_checked", "phj_overflowed", "hash32",
     "choose_partition_bits", "nphj_join",
-    "group_aggregate", "groupby_sort", "groupby_partition_hash",
-    "groupby_scatter", "groupby_sort_pallas", "choose_groupby_strategy",
+    "group_aggregate", "groupby_sort", "groupby_partition",
+    "groupby_partition_checked", "groupby_partition_overflowed",
+    "groupby_partition_hash", "groupby_scatter", "groupby_sort_pallas",
+    "choose_groupby_strategy", "choose_groupby_partition_bits",
     "JoinStats", "choose_algorithm", "choose_smj_pattern",
-    "PrimitiveProfile", "predict_join_time",
+    "PrimitiveProfile", "predict_join_time", "predict_groupby_time",
     "peak_memory", "peak_memory_bytes", "gfur_ledger", "gftr_ledger",
     "primitives",
 ]

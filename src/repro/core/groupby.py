@@ -15,8 +15,16 @@ principles to grouped aggregation:
     the per-tile partials with a sorted pass. Correct for *any* key
     distribution (heavy hitters are reduced tile-locally first, the same way
     GPU shared-memory pre-aggregation absorbs skew);
-  * wide payloads follow Algorithm 1: payload columns are transformed lazily,
-    one at a time, against the key column.
+  * partition-based aggregation ("partition", DESIGN.md §8) radix-partitions
+    rows on hashed key bits until each partition's group set fits a
+    VMEM-resident block, then aggregates every partition independently —
+    no global sort, no cross-partition combine, since a group lives in
+    exactly one partition. The paper's third group-by algorithm, ideal for
+    high group cardinalities;
+  * wide payloads follow Algorithm 1 with the one-permutation refinement:
+    the sort/partition is planned ONCE (`primitives.plan_sort_permutation` /
+    `plan_partition_permutation`) and every payload column is materialized
+    with a single `apply_permutation` gather.
 
 All APIs are static-shape: `num_groups` is a capacity; outputs are
 (keys[num_groups], aggs[num_groups], valid_count), padded with KEY_SENTINEL.
@@ -29,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from .table import KEY_SENTINEL, Table
+from .hash_join import hash32
 from . import primitives as prim
 
 AGG_OPS = ("sum", "count", "min", "max", "mean")
@@ -74,11 +83,13 @@ def groupby_sort(
 ):
     """Sort rows by key, detect run boundaries, segment-reduce.
 
-    Per Algorithm 1's lazy transform, each payload column is sorted alongside
-    the key column one at a time (stable order => consistent groups).
+    One-permutation materialization (DESIGN.md §8): the key sort is planned
+    once and each payload column is transformed with a single
+    `apply_permutation` gather — Algorithm 1's lazy transform without the
+    per-column re-sort it used to cost.
     Returns (Table(key + agg columns), valid_count)."""
     keys = table[key]
-    sk = prim.sort_pairs(keys)
+    sk, perm = prim.plan_sort_permutation(keys)
     boundary = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     boundary &= sk != KEY_SENTINEL
     valid_row = sk != KEY_SENTINEL
@@ -95,7 +106,7 @@ def groupby_sort(
 
     cols = {key: out_keys[:num_groups]}
     for col, op in aggs.items():
-        _, tv = prim.sort_pairs(keys, table[col])  # lazy per-column transform
+        tv = prim.apply_permutation(perm, table[col])  # one gather per column
         acc = _seg_reduce(op, jnp.where(valid_row, tv, 0) if op in ("sum", "mean") else tv,
                           gid_cap, num_groups + 1)
         cols[f"{col}_{op}"] = _finalize(op, acc, counts)[:num_groups]
@@ -106,6 +117,27 @@ def groupby_sort(
 # ---------------------------------------------------------------------------
 # Two-phase block aggregation (MXU one-hot partials + sorted combine)
 # ---------------------------------------------------------------------------
+def _block_local_groups(kp):
+    """Block-local grouping core shared by the tile and partition paths: for
+    (T, B) key blocks (KEY_SENTINEL = invalid slot), sort each block locally
+    — the VMEM-resident analogue of a per-thread-block hash table — and
+    assign dense local group ids.
+
+    Returns (ks, order, valid, bnd, lgid): locally sorted keys, the per-block
+    sort order (to align payload blocks), validity, run boundaries, and local
+    group ids (invalid rows -> B, so they drop out of one-hot/segment
+    reductions)."""
+    block = kp.shape[1]
+    order = jnp.argsort(kp, axis=1, stable=True)
+    ks = jnp.take_along_axis(kp, order, axis=1)
+    valid = ks != KEY_SENTINEL
+    bnd = jnp.concatenate([jnp.ones((ks.shape[0], 1), bool), ks[:, 1:] != ks[:, :-1]], axis=1)
+    bnd &= valid
+    lgid = jnp.cumsum(bnd.astype(jnp.int32), axis=1) - 1
+    lgid = jnp.where(valid, lgid, block)
+    return ks, order, valid, bnd, lgid
+
+
 def _tile_partials(keys, cols_ops, block):
     """Phase 1: per tile of `block` rows, aggregate duplicates tile-locally.
 
@@ -115,13 +147,7 @@ def _tile_partials(keys, cols_ops, block):
     n = keys.shape[0]
     n_pad = -n % block
     kp = jnp.pad(keys, (0, n_pad), constant_values=KEY_SENTINEL).reshape(-1, block)
-    order = jnp.argsort(kp, axis=1, stable=True)
-    ks = jnp.take_along_axis(kp, order, axis=1)
-    valid = ks != KEY_SENTINEL
-    bnd = jnp.concatenate([jnp.ones((ks.shape[0], 1), bool), ks[:, 1:] != ks[:, :-1]], axis=1)
-    bnd &= valid
-    lgid = jnp.cumsum(bnd.astype(jnp.int32), axis=1) - 1
-    lgid = jnp.where(valid, lgid, block)  # invalid rows drop out of the one-hot
+    ks, order, valid, bnd, lgid = _block_local_groups(kp)
     oh = jax.nn.one_hot(lgid, block, dtype=jnp.float32)  # (T, block, block)
 
     pcounts = jnp.einsum("tbg->tg", oh)
@@ -211,6 +237,221 @@ def groupby_partition_hash(
 
 
 # ---------------------------------------------------------------------------
+# Partition-based (high group cardinality; paper's third algorithm)
+# ---------------------------------------------------------------------------
+# default padded-block capacity per partition (the BUILD_BLOCK analogue);
+# a single key's rows co-hash no matter the fan-out, so per-key multiplicity
+# beyond this cannot be partitioned away — the engine guard checks against it
+PARTITION_ROW_BLOCK = 256
+
+
+def choose_groupby_partition_bits(n_rows: int,
+                                  row_block: int = PARTITION_ROW_BLOCK) -> int:
+    """Fan-out so that E[partition rows] <= row_block/4: with hashed keys and
+    per-key multiplicity << row_block (the high-cardinality regime this
+    algorithm targets), overflow of the padded block becomes negligible.
+
+    Capped at 16 bits (65536 partitions); past the cap the BLOCK must grow
+    instead — `_partition_layout` below holds the invariant either way."""
+    target = max(1, (4 * n_rows) // row_block)
+    return max(1, min(16, (target - 1).bit_length()))
+
+
+def _partition_layout(n_rows: int, row_block: int,
+                      partition_bits: int | None) -> tuple[int, int]:
+    """(p_bits, row_block) honoring the VMEM-fit invariant
+    E[rows/partition] <= row_block/4. When the requested block would need
+    more than the 16-bit fan-out cap, the block grows to cover the expected
+    partition size — never silently over-fill partitions (that would drop
+    every partition's overhang, not a tail). Explicit partition_bits skips
+    the auto-grow: the caller owns the layout (the checked driver relies on
+    this to pin its escalated geometry)."""
+    if partition_bits is not None:
+        return partition_bits, row_block
+    p_bits = choose_groupby_partition_bits(n_rows, row_block)
+    need = -(-4 * n_rows // (1 << p_bits))  # block for E[size] == block/4
+    if need > row_block:
+        row_block = 1 << int(need - 1).bit_length()
+    return p_bits, row_block
+
+
+def _partition_digits(keys: jax.Array, p_bits: int) -> jax.Array:
+    """Hash-derived partition digit per row, in [0, P]: valid keys spread
+    over [0, P) via the avalanching hash (a digit is a pure function of the
+    key, so every group lands wholly in one partition); KEY_SENTINEL padding
+    floods its own dedicated partition P, so a join output that is half
+    padding can never crowd valid keys out of a shared bucket.
+
+    Float keys are bitcast (not value-cast) so every distinct float hashes
+    distinctly, with -0.0 normalized to +0.0 first — the two compare equal,
+    so they must co-partition the way the sort path co-groups them. NaN keys
+    are outside the key contract (valid keys are >= 0, table.py) and are
+    routed to the padding partition, i.e. dropped like sentinels."""
+    if jnp.issubdtype(keys.dtype, jnp.floating):
+        sentinel = jnp.isnan(keys) | (keys == KEY_SENTINEL)
+        normed = jnp.where(keys == 0.0, jnp.zeros((), keys.dtype), keys)
+        hashable = jax.lax.bitcast_convert_type(
+            normed, jnp.dtype(f"int{keys.dtype.itemsize * 8}"))
+    else:
+        hashable = keys
+        sentinel = keys == jnp.asarray(KEY_SENTINEL, keys.dtype)
+    d = (hash32(hashable) & ((1 << p_bits) - 1)).astype(jnp.int32)
+    return jnp.where(sentinel, 1 << p_bits, d)
+
+
+def groupby_partition(
+    table: Table,
+    *,
+    key: str = "k",
+    aggs: dict[str, str],
+    num_groups: int,
+    row_block: int = PARTITION_ROW_BLOCK,
+    partition_bits: int | None = None,
+):
+    """Partition-based grouped aggregation (DESIGN.md §8).
+
+    Multi-pass radix partition on the hashed group key's bits until each
+    partition fits a VMEM-resident `row_block`-row block, then aggregate
+    every partition independently with the block-local sort machinery of
+    `partition_hash` — no global sort and no cross-partition combine pass,
+    because a group lives in exactly one partition. Dense per-partition
+    outputs are concatenated (stable compaction) into the shared
+    (Table, valid_count) contract; output rows are ordered by
+    (partition, key), not globally key-sorted.
+
+    One-permutation materialization: the partition is planned once
+    (`plan_partition_permutation`, carrying only digit+iota) and each column
+    — key and payloads — is gathered exactly once, straight into the blocked
+    (P, row_block) layout.
+
+    Static-shape caveat: a partition holding more than `row_block` rows has
+    its overhang dropped. `choose_groupby_partition_bits` sizes the fan-out
+    for E[rows/partition] <= row_block/4, which makes overflow negligible for
+    the high-cardinality, low-multiplicity inputs the strategy chooser routes
+    here; heavy per-key duplication co-hashes regardless of fan-out, so
+    skewed/duplicated inputs belong to `partition_hash` instead. Use
+    `groupby_partition_checked` for an eager overflow check + escalation."""
+    keys = table[key]
+    n = keys.shape[0]
+    p_bits, row_block = _partition_layout(n, row_block, partition_bits)
+    P = 1 << p_bits
+    digits = _partition_digits(keys, p_bits)
+    # One-permutation plan over P+1 partitions (the extra one swallows
+    # sentinel padding and is never materialized). The key column rides the
+    # plan passes (Algorithm 1's key-rides-along idiom), so it comes back
+    # partitioned without a separate unclustered gather.
+    perm, (keys_part,), offsets, sizes = prim.plan_partition_permutation(
+        digits, P + 1, carry=(keys,))
+
+    # Blocked VMEM layout of the P valid partitions: position (p, i) holds
+    # the i-th row of partition p. Composing the block map with the planned
+    # permutation gathers every payload column from the ORIGINAL table
+    # exactly once; the key is a clustered read of the carried column.
+    i = jnp.arange(row_block, dtype=jnp.int32)[None, :]
+    pos = offsets[:P, None] + i
+    in_part = i < jnp.minimum(sizes[:P, None], row_block)
+    pos_c = jnp.clip(pos, 0, n - 1)
+    src = jnp.take(perm, pos_c)  # (P, row_block) source rows for payloads
+    kblocks = jnp.where(in_part, jnp.take(keys_part, pos_c),
+                        jnp.asarray(KEY_SENTINEL, keys.dtype))
+
+    # Per-partition aggregation: block-local sort + dense local group ids
+    # (the shared-memory hash-table analogue), then one segmented reduction
+    # into per-partition accumulator slots. Slot (p, g) is partition p's g-th
+    # group; no slot is shared across partitions, so these are FINAL values.
+    ks, order, valid, bnd, lgid = _block_local_groups(kblocks)
+    n_slots = P * row_block
+    gid = jnp.where(valid, jnp.arange(P, dtype=jnp.int32)[:, None] * row_block + lgid,
+                    n_slots)  # invalid -> dump slot
+    gid_f = gid.reshape(-1)
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32).reshape(-1), gid_f,
+                                 num_segments=n_slots + 1)
+    slot_keys = (
+        jnp.full((n_slots + 1,), KEY_SENTINEL, keys.dtype)
+        .at[jnp.where(bnd, gid, n_slots).reshape(-1)]
+        .set(ks.reshape(-1))
+    )
+
+    agg_cols = {}
+    for col, op in aggs.items():
+        if op == "count":
+            agg_cols[f"{col}_{op}"] = counts
+            continue
+        vblocks = jnp.take(table[col], src)  # the column's ONE gather
+        vs = jnp.take_along_axis(vblocks, order, axis=1).reshape(-1)
+        acc = _seg_reduce(op, vs, gid_f, n_slots + 1)
+        agg_cols[f"{col}_{op}"] = _finalize(op, acc, counts)
+
+    # Concatenate dense per-partition outputs: stable compaction of the live
+    # slots preserves (partition, key) order.
+    present = slot_keys[:n_slots] != jnp.asarray(KEY_SENTINEL, keys.dtype)
+    names = [key] + list(agg_cols)
+    arrays = [slot_keys[:n_slots]] + [a[:n_slots] for a in agg_cols.values()]
+    compacted, count = prim.compact(present, arrays, num_groups)
+    out = dict(zip(names, compacted))
+    out[key] = jnp.where(jnp.arange(num_groups) < count, out[key],
+                         jnp.asarray(KEY_SENTINEL, keys.dtype))
+    return Table(out), count
+
+
+def groupby_partition_overflowed(
+    keys: jax.Array, *, row_block: int = PARTITION_ROW_BLOCK,
+    partition_bits: int | None = None
+):
+    """Host-side check: would any valid partition exceed the (layout-
+    adjusted) block? Returns (overflowed, p_bits, max_partition_rows).
+    Sentinel rows are excluded — their dedicated partition is allowed to
+    overflow."""
+    p_bits, row_block = _partition_layout(keys.shape[0], row_block,
+                                          partition_bits)
+    digits = _partition_digits(keys, p_bits)
+    sizes = jnp.bincount(digits, length=(1 << p_bits) + 1)[:-1]
+    mx = int(jnp.max(sizes))
+    return mx > row_block, p_bits, mx
+
+
+def groupby_partition_checked(
+    table: Table,
+    *,
+    key: str = "k",
+    aggs: dict[str, str],
+    num_groups: int,
+    row_block: int = PARTITION_ROW_BLOCK,
+    max_extra_bits: int = 4,
+    **kw,
+):
+    """groupby_partition with eager overflow escalation (the phj_join_checked
+    policy): first add fan-out bits — separating co-hashed distinct groups —
+    then, if a single key's duplication still overflows (more bits cannot
+    split one key), grow the block to cover the observed maximum. Always
+    exact; the escalation is a cheap host-side histogram."""
+    keys = table[key]
+    # resolve the auto layout ONCE, then pin it explicitly through the
+    # escalation (explicit partition_bits disables the auto-grow)
+    p_bits, row_block = _partition_layout(
+        keys.shape[0], row_block, kw.pop("partition_bits", None))
+    over, _, mx0 = groupby_partition_overflowed(
+        keys, row_block=row_block, partition_bits=p_bits)
+    extra = 0
+    while over and extra < max_extra_bits and p_bits + extra < 20:
+        extra += 1
+        over, _, _ = groupby_partition_overflowed(
+            keys, row_block=row_block, partition_bits=p_bits + extra)
+    rb = row_block
+    if over:
+        # more fan-out never split the heavy key, so the extra bits only
+        # multiply the P * row_block slot footprint — revert them and grow
+        # the block to the base layout's heaviest partition instead (always
+        # the smaller geometry: splitting can at best divide the max by the
+        # same 2^extra it multiplies the partition count by)
+        extra = 0
+        rb = 1 << max(int(mx0 - 1).bit_length(),
+                      int(row_block - 1).bit_length())
+    return groupby_partition(table, key=key, aggs=aggs, num_groups=num_groups,
+                             row_block=rb, partition_bits=p_bits + extra, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Scatter baseline (dense key domain)
 # ---------------------------------------------------------------------------
 def groupby_scatter(
@@ -264,31 +505,35 @@ def groupby_sort_pallas(
 ):
     """Sort-based group-by whose per-tile partial reduction runs in the
     Pallas segsum kernel (scatter-free MXU path; interpret-mode on CPU).
-    Sum/count/mean only (kernel computes sums+counts)."""
+    Sum/count/mean only (kernel computes sums+counts).
+
+    The key sort is planned once (one-permutation layer) and each payload
+    column costs one gather + one kernel pass. The count kernel is key-only
+    and identical for every column, so it runs at most once — and only when
+    a mean/count aggregate actually needs it."""
     from repro.kernels import ops as kops
 
     keys = table[key]
-    out = {}
-    count = None
-    first = True
-    for col, op in aggs.items():
+    for op in aggs.values():
         if op not in ("sum", "mean", "count"):
             raise ValueError(f"sort_pallas supports sum/mean/count, got {op}")
-        sk, sv = prim.sort_pairs(keys, table[col])
+    sk, perm = prim.plan_sort_permutation(keys)
+    out = {}
+    count = gc = None
+    if any(op in ("mean", "count") for op in aggs.values()):
+        # hoisted key-only count pass (shared by every mean/count column)
+        out[key], gc, count = kops.groupby_sorted_sum(
+            sk, jnp.ones(sk.shape, jnp.float32), num_groups, "pallas", tile=tile)
+    for col, op in aggs.items():
+        if op == "count":
+            out[f"{col}_{op}"] = gc.astype(jnp.int32)
+            continue
+        sv = prim.apply_permutation(perm, table[col])  # one gather per column
         gk, gs, cnt = kops.groupby_sorted_sum(sk, sv.astype(jnp.float32),
                                               num_groups, "pallas", tile=tile)
-        _, gc, _ = kops.groupby_sorted_sum(sk, jnp.ones_like(sv, jnp.float32),
-                                           num_groups, "pallas", tile=tile)
-        if first:
-            out[key] = gk
-            count = cnt
-            first = False
-        if op == "sum":
-            out[f"{col}_{op}"] = gs
-        elif op == "count":
-            out[f"{col}_{op}"] = gc.astype(jnp.int32)
-        else:
-            out[f"{col}_{op}"] = gs / jnp.maximum(gc, 1.0)
+        if count is None:
+            out[key], count = gk, cnt
+        out[f"{col}_{op}"] = gs if op == "sum" else gs / jnp.maximum(gc, 1.0)
     return Table(out), count
 
 
@@ -313,8 +558,17 @@ def choose_groupby_strategy(
       * heavy duplication (rows >> groups) or skew -> 'partition_hash'
         (tile-local pre-aggregation collapses duplicates before the
         expensive pass, the shared-memory-hash-table regime);
-      * high cardinality -> 'sort' (one sequential sort pass beats hash
-        tables that spill out of fast memory — the GFTR insight).
+      * high cardinality + hashable (integer) keys -> 'partition' (the
+        paper's partition-based algorithm: radix-partition on hashed key
+        bits until each partition's group set fits a VMEM-resident block,
+        aggregate partitions independently — the pass count scales with
+        log(groups) instead of the key width, and there is no global
+        sort or combine; requires low per-key multiplicity, which high
+        cardinality implies);
+      * high cardinality, non-integer keys -> 'sort' (one sequential sort
+        pass beats hash tables that spill out of fast memory — the GFTR
+        insight; float keys cannot be radix-bucketed by value-hash without
+        a bitcast normalization, so sort stays the robust fallback).
     """
     domain = None
     # scatter indexes the accumulator by key value, so the keys must be
@@ -338,8 +592,15 @@ def choose_groupby_strategy(
             f"rows/groups ~ {n_rows / max(est_groups, 1.0):.0f}x: tile "
             "pre-aggregation shrinks the combine pass"
         )
+    if integer_key:
+        return "partition", (
+            f"high cardinality (~{est_groups:.0f} groups, low multiplicity): "
+            "radix-partition to VMEM-resident accumulators, no global "
+            "sort/combine"
+        )
     return "sort", (
-        "high cardinality: sequential sort pass beats spilling hash tables"
+        "high cardinality, non-integer keys: sequential sort pass beats "
+        "spilling hash tables"
     )
 
 
@@ -353,9 +614,11 @@ def group_aggregate(
     **kw,
 ):
     """Unified entry point.
-    strategy in {'sort', 'partition_hash', 'scatter', 'sort_pallas'}."""
+    strategy in {'sort', 'partition', 'partition_hash', 'scatter',
+    'sort_pallas'}."""
     fn = {
         "sort": groupby_sort,
+        "partition": groupby_partition,
         "partition_hash": groupby_partition_hash,
         "scatter": groupby_scatter,
         "sort_pallas": groupby_sort_pallas,

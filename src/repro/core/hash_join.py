@@ -178,14 +178,14 @@ def phj_join(
 
     dig_r = _digits(R[key], p_bits, hash_keys)
     dig_s = _digits(S[key], p_bits, hash_keys)
-    # Stable partition permutations (multi-pass radix semantics; determinism
-    # by construction — §4.3's requirement).
-    perm_r, off_r, sz_r = prim.partition_permutation(dig_r, P)
-    perm_s, off_s, sz_s = prim.partition_permutation(dig_s, P)
+    # One-permutation transform plan (multi-pass radix semantics; determinism
+    # by construction — §4.3's requirement): the partition is planned once
+    # per side and every column it touches costs exactly one gather.
+    perm_r, off_r, sz_r = prim.plan_partition_permutation(dig_r, P)
+    perm_s, off_s, sz_s = prim.plan_partition_permutation(dig_s, P)
 
-    kr = jnp.take(R[key], perm_r)
-    ks = jnp.take(S[key], perm_s)
-    dig_s_part = jnp.take(dig_s, perm_s)
+    kr = prim.apply_permutation(perm_r, R[key])
+    ks, dig_s_part = prim.apply_permutation(perm_s, S[key], dig_s)
 
     bkeys, _, overflow = build_blocks(kr, off_r, sz_r, build_block)
 
@@ -231,17 +231,18 @@ def phj_join(
         else:
             _g = lambda src, idx: prim.gather(src, idx, fill=0)
         for n in r_pay:
-            tr_n = jnp.take(R[n], perm_r, axis=0)  # (re-)transform col n
+            tr_n = prim.apply_permutation(perm_r, R[n])  # col n's ONE gather
             cols[n] = _g(tr_n, ID_R)
         for n in s_pay:
-            ts_n = jnp.take(S[n], perm_s, axis=0)
+            ts_n = prim.apply_permutation(perm_s, S[n])
             cols[n] = _g(ts_n, ID_S)
     else:
         raise ValueError(f"unknown pattern {pattern!r}")
 
-    del reuse_transform_perm  # GFTR here always reuses the digit layout; the
-    # faithful per-column re-partition has identical output (determinism) and
-    # is what the cost model charges for (see costmodel.py).
+    del reuse_transform_perm  # kept for API compatibility: GFTR always
+    # reuses the planned permutation now (the per-column re-partition it
+    # used to gate is gone; determinism makes the outputs identical and the
+    # cost model charges the single-gather transform — planner.py).
     return Table(cols), count
 
 

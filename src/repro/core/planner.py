@@ -176,7 +176,58 @@ def predict_join_time(stats: JoinStats, algorithm: str, pattern: str,
     for ncols, n_side in ((stats.r_payload_cols, stats.n_r), (stats.s_payload_cols, stats.n_s)):
         for i in range(ncols):
             if pattern == "gftr" and i >= 1:
-                t["materialize"] += trans(n_side, kb, vb)  # lazy re-transform
+                # lazy transform via the planned permutation: one unclustered
+                # gather of the column, not a key+payload re-sort/partition
+                # (one-permutation materialization, DESIGN.md §8)
+                t["materialize"] += p.gather_cost(n_side, vb, clustered=False)
             t["materialize"] += p.gather_cost(n_out, vb, clustered)
     t["total"] = sum(t.values())
     return t
+
+
+def predict_groupby_time(n_rows: int, n_aggs: int, strategy: str,
+                         profile: PrimitiveProfile | None = None, *,
+                         key_bytes: int = 4, val_bytes: int = 4,
+                         row_block: int = 256) -> float:
+    """Analytic grouped-aggregation time (seconds) per strategy, matching
+    the executable paths in core.groupby:
+
+      sort            one (key, iota) sort — radix passes scale with the
+                      KEY WIDTH — + per column: one permutation gather + a
+                      streaming segmented reduce
+      partition       radix passes over (digit, key, iota) — pass count
+                      scales with log2(partitions), independent of key
+                      width — + one gather per payload column into the
+                      blocked layout + a streaming block-local reduce per
+                      column (the VMEM-resident accumulator emits distinct
+                      groups, not slots, so its HBM traffic is ~n)
+      partition_hash  streaming tile-partial pass + sorted combine over the
+                      collapsed partials (~n/4)
+      scatter         per column: one unclustered accumulator scatter
+
+    The sort/partition asymmetry is the paper's crossover: at high group
+    cardinality partition replaces key-width-many passes with
+    ceil((p_bits+1)/8) of them carrying the key along — decisive for 8-byte
+    keys and already ahead at 4 bytes once the fan-out needs <= 2 passes.
+    """
+    p = profile or PrimitiveProfile()
+    kb, vb = key_bytes, val_bytes
+    if strategy in ("sort", "sort_pallas"):
+        t = p.sort_cost(n_rows, kb, 4)  # key + iota, once
+        t += n_aggs * p.gather_cost(n_rows, vb, clustered=False)
+        t += (1 + n_aggs) * 2 * n_rows * vb / p.seq_bw
+        return t
+    if strategy == "partition":
+        from .groupby import choose_groupby_partition_bits
+
+        bits = choose_groupby_partition_bits(n_rows, row_block) + 1
+        t = p.partition_cost(n_rows, 4, kb + 4, bits)  # (digit, key, iota)
+        t += n_aggs * p.gather_cost(n_rows, vb, clustered=False)
+        t += (1 + n_aggs) * 2 * n_rows * vb / p.seq_bw  # block-local reduce
+        return t
+    if strategy == "partition_hash":
+        return (2 * n_rows * (kb + vb) / p.seq_bw
+                + n_aggs * p.sort_cost(max(n_rows // 4, 1), kb, vb))
+    if strategy == "scatter":
+        return max(n_aggs, 1) * p.gather_cost(n_rows, vb, clustered=False)
+    raise ValueError(f"unknown group-by strategy {strategy!r}")

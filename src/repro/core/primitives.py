@@ -46,6 +46,91 @@ def argsort_stable(keys: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# One-permutation materialization layer (DESIGN.md §8)
+#
+# Algorithm 1's "transform lazily" only pays off if the transform itself is
+# cheap: re-running the full sort/partition once per payload column turns one
+# data-movement plan into O(C) of them. These planners run the sort/partition
+# machinery ONCE, carrying only (key-or-digit, iota), and return a composed
+# permutation; `apply_permutation` then materializes any number of payload
+# columns at exactly one gather each.
+# ---------------------------------------------------------------------------
+def apply_permutation(perm: jax.Array, *cols: jax.Array):
+    """Materialize a planned permutation: out[i] = col[perm[i]] per column —
+    one gather per column, the entire per-column transform cost.
+
+    Returns a single array for one column, a tuple for several (sort_pairs
+    idiom)."""
+    outs = tuple(jnp.take(c, perm, axis=0) for c in cols)
+    return outs if len(cols) != 1 else outs[0]
+
+
+def plan_sort_permutation(keys: jax.Array):
+    """Plan a stable key sort once, payloads later.
+
+    Returns (sorted_keys, perm) where perm is the composed gather map:
+    `apply_permutation(perm, col)` equals `sort_pairs(keys, col)[1]` for any
+    payload column, without re-sorting."""
+    iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    sk, perm = jax.lax.sort((keys, iota), num_keys=1, is_stable=True)
+    return sk, perm
+
+
+def plan_partition_permutation(digits: jax.Array, num_partitions: int, *,
+                               max_pass_bits: int | None = None,
+                               carry: Sequence[jax.Array] = ()):
+    """Plan a stable radix partition once, payloads later.
+
+    Returns (perm, offsets, sizes) — or (perm, carried, offsets, sizes) when
+    `carry` is non-empty — with all layout arrays int32:
+      perm[j]    = source row landing at output position j (gather form)
+      offsets[p] = first output position of partition p
+      sizes[p]   = rows in partition p
+
+    `max_pass_bits=None` (production) computes the permutation with one XLA
+    stable sort over the digits; an integer runs the paper's multi-pass
+    structure — stable passes of <= max_pass_bits bits, LSD order, carrying
+    only (digit, iota) instead of payload columns — and composes them into
+    the same single permutation (equality is the §4.3 stability argument;
+    property-tested in tests/test_permutation.py). Either way, payload
+    columns cost one `apply_permutation` gather each, never one gather per
+    pass.
+
+    `carry` columns ride the plan passes themselves (Algorithm 1's
+    key-rides-along idiom): they come back already partitioned, for free at
+    plan time instead of one unclustered gather each afterwards. Carry the
+    column(s) the next phase reads immediately (e.g. the group key);
+    everything else is cheaper via apply_permutation."""
+    n = digits.shape[0]
+    digits = digits.astype(jnp.int32)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    if max_pass_bits is None:
+        res = jax.lax.sort((digits,) + tuple(carry) + (iota,), num_keys=1,
+                           is_stable=True)
+        carried, perm = res[1:-1], res[-1]
+    else:
+        total_bits = max(1, int(num_partitions - 1).bit_length())
+        perm = iota
+        cur = digits
+        carried = tuple(carry)
+        bit = 0
+        while bit < total_bits:
+            bits = min(max_pass_bits, total_bits - bit)
+            sub = (cur >> bit) & ((1 << bits) - 1)
+            res = jax.lax.sort((sub, cur) + carried + (perm,), num_keys=1,
+                               is_stable=True)
+            cur, carried, perm = res[1], res[2:-1], res[-1]
+            bit += bits
+    sizes = jnp.bincount(digits, length=num_partitions).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1].astype(jnp.int32)]
+    )
+    if carry:
+        return perm, carried, offsets, sizes
+    return perm, offsets, sizes
+
+
+# ---------------------------------------------------------------------------
 # RADIX-PARTITION
 # ---------------------------------------------------------------------------
 def radix_digits(keys: jax.Array, start_bit: int, num_bits: int) -> jax.Array:
@@ -68,11 +153,11 @@ def partition_permutation(digits: jax.Array, num_partitions: int):
     Deterministic by construction (stable sort on digit) — this is the TPU
     equivalent of the paper's §4.3 requirement that partitioning be stable so
     the same permutation applies to every payload column.
+
+    offsets/sizes are int32 on every path (the Pallas rank kernel, the XLA
+    ref, and this planner agree — see tests/test_permutation.py).
     """
-    perm = argsort_stable(digits)
-    sizes = jnp.bincount(digits, length=num_partitions)
-    offsets = jnp.concatenate([jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)[:-1]])
-    return perm, offsets, sizes
+    return plan_partition_permutation(digits, num_partitions)
 
 
 def radix_partition(
@@ -102,21 +187,21 @@ def multi_pass_radix_partition(
     stability makes the composition a single stable partition on all
     `total_bits` bits.
 
+    One-permutation materialization: the passes carry only (digit, iota) and
+    compose into a single permutation; every column — key and payloads alike
+    — is then gathered exactly once, instead of once per pass (which made
+    wide partitions cost O(passes * C) materializations).
+
     Returns (keys_out, *values_out, offsets, sizes) for the full fan-out.
     """
-    arrs = (keys,) + values
-    bit = start_bit
-    remaining = total_bits
-    while remaining > 0:
-        bits = min(RADIX_BITS_PER_PASS, remaining)
-        res = radix_partition(arrs[0], *arrs[1:], start_bit=bit, num_bits=bits)
-        arrs = res[:-2]
-        bit += bits
-        remaining -= bits
-    digits = radix_digits(arrs[0], start_bit, total_bits)
-    sizes = jnp.bincount(digits, length=1 << total_bits)
-    offsets = jnp.concatenate([jnp.zeros((1,), sizes.dtype), jnp.cumsum(sizes)[:-1]])
-    return arrs + (offsets, sizes)
+    digits = radix_digits(keys, start_bit, total_bits)
+    perm, offsets, sizes = plan_partition_permutation(
+        digits, 1 << total_bits, max_pass_bits=RADIX_BITS_PER_PASS
+    )
+    outs = apply_permutation(perm, keys, *values)
+    if not values:
+        outs = (outs,)
+    return outs + (offsets, sizes)
 
 
 def num_radix_passes(total_bits: int) -> int:

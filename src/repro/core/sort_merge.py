@@ -70,7 +70,8 @@ def smj_join(
     pattern: str = "gftr",  # "gftr" (SMJ-OM) | "gfur" (SMJ-UM)
     out_size: int | None = None,
     mode: str = "pk_fk",  # "pk_fk" | "mn"
-    reuse_transform_perm: bool = False,  # beyond-paper: sort keys once, apply perm per column
+    reuse_transform_perm: bool = False,  # compat no-op: the one-permutation
+    # layer always sorts keys once and applies the perm per column now
     find_impl: str = "xla",  # "xla" | "pallas" (windowed lower-bound kernel)
 ):
     """End-to-end sort-merge join. Returns (Table, valid_count).
@@ -134,32 +135,18 @@ def _smj_gfur(R, S, key, r_pay, s_pay, out_size, mode, find_impl="xla"):
 
 
 def _smj_gftr(R, S, key, r_pay, s_pay, out_size, mode, reuse_perm, find_impl="xla"):
-    # Algorithm 1. Transformation phase: sort keys together with the FIRST
-    # payload column of each relation (lines 1-2).
-    if reuse_perm:
-        perm_r = prim.argsort_stable(R[key])
-        perm_s = prim.argsort_stable(S[key])
-        kr = jnp.take(R[key], perm_r)
-        ks = jnp.take(S[key], perm_s)
-        tr = {n: jnp.take(R[n], perm_r) for n in r_pay[:1]}
-        ts = {n: jnp.take(S[n], perm_s) for n in s_pay[:1]}
-        transform_r = lambda n: jnp.take(R[n], perm_r)
-        transform_s = lambda n: jnp.take(S[n], perm_s)
-    else:
-        if r_pay:
-            kr, tr0 = prim.sort_pairs(R[key], R[r_pay[0]])
-            tr = {r_pay[0]: tr0}
-        else:
-            kr, tr = prim.sort_pairs(R[key]), {}
-        if s_pay:
-            ks, ts0 = prim.sort_pairs(S[key], S[s_pay[0]])
-            ts = {s_pay[0]: ts0}
-        else:
-            ks, ts = prim.sort_pairs(S[key]), {}
-        # Lazy per-column re-transform (Algorithm 1 lines 5/8): re-sorts the
-        # key column alongside payload i — trades passes for peak memory.
-        transform_r = lambda n: prim.sort_pairs(R[key], R[n])[1]
-        transform_s = lambda n: prim.sort_pairs(S[key], S[n])[1]
+    # Algorithm 1 with the one-permutation refinement (DESIGN.md §8): the
+    # key sort is planned ONCE per relation, and every payload column —
+    # first or lazy — is transformed with a single apply_permutation gather.
+    # (`reuse_perm` is kept for API compatibility; the per-column re-sort it
+    # used to gate is gone — stability made the outputs identical anyway.)
+    del reuse_perm
+    kr, perm_r = prim.plan_sort_permutation(R[key])
+    ks, perm_s = prim.plan_sort_permutation(S[key])
+    tr = {n: prim.apply_permutation(perm_r, R[n]) for n in r_pay[:1]}
+    ts = {n: prim.apply_permutation(perm_s, S[n]) for n in s_pay[:1]}
+    transform_r = lambda n: prim.apply_permutation(perm_r, R[n])
+    transform_s = lambda n: prim.apply_permutation(perm_s, S[n])
 
     # Match finding on sorted keys with *virtual* tuple IDs (line 3).
     keys_o, vid_r, vid_s, valid, count = _find(kr, ks, mode, out_size, find_impl)

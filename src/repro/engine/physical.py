@@ -35,10 +35,11 @@ from typing import Mapping
 
 import numpy as np
 
-from repro.core.groupby import choose_groupby_strategy
+from repro.core.groupby import PARTITION_ROW_BLOCK, choose_groupby_strategy
 from repro.core.hash_join import BUILD_BLOCK
 from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm,
-                                choose_smj_pattern, predict_join_time)
+                                choose_smj_pattern, predict_groupby_time,
+                                predict_join_time)
 
 from . import logical as L
 from . import stats as S
@@ -652,12 +653,15 @@ class Optimizer:
         child = self._build(node.child)
         ks = child.col_stats.get(node.key)
         est_groups = min(ks.distinct if ks else child.est_rows, child.est_rows)
-        # scatter indexes the accumulator BY key value: only provably
-        # integer keys qualify (int32-casting floats would merge groups)
+        # scatter indexes the accumulator BY key value and partition radix-
+        # buckets hashed key bits: only provably integer keys qualify
+        # (int32-casting floats would merge groups). Base-table origin is the
+        # primary proof; for derived keys the propagated ColumnStats carries
+        # the sketched dtype kind.
         origin = child.origins.get(node.key)
-        integer_key = origin is not None and np.issubdtype(
+        integer_key = (origin is not None and np.issubdtype(
             np.dtype(self.catalog.tables[origin[0]][origin[1]].dtype),
-            np.integer)
+            np.integer)) or (origin is None and ks is not None and ks.integer)
         strategy, rationale = choose_groupby_strategy(
             int(child.est_rows), est_groups,
             key_min=ks.min if ks else None,
@@ -665,21 +669,35 @@ class Optimizer:
             zipf=ks.zipf if ks else 0.0,
             integer_key=integer_key,
         )
+        if strategy == "partition":
+            # The executor runs the plain (jit-safe) partition path, which
+            # silently drops a partition's overhang past its padded block —
+            # and a single key's rows co-hash no matter the fan-out. Sampled
+            # zipf/distinct sketches can miss one heavy key, so demand the
+            # same PROOF the m:n join guard uses: an exact max-multiplicity
+            # bound from the base table. Not provable (derived/fanned-out
+            # key) or too heavy -> fall back to the always-exact sort.
+            chain = self._scan_chain(child)
+            o_k = child.origins.get(node.key)
+            if (chain is not None and o_k is not None
+                    and chain[0] == o_k[0]):
+                mult = self.catalog.max_multiplicity(o_k, chain[1])
+            else:
+                mult = float("inf")
+            if mult > PARTITION_ROW_BLOCK // 4:
+                strategy = "sort"
+                rationale = (
+                    f"high cardinality, but max key multiplicity "
+                    f"{'unprovable' if mult == float('inf') else f'{mult:.0f}'}"
+                    f" exceeds the partition block's {PARTITION_ROW_BLOCK // 4}"
+                    "-row safety bound -> exact sort")
         if strategy == "scatter":
             # scatter needs the accumulator to cover the dense domain
             cap = _round_capacity(float(ks.max) + 1, 1.0)
         else:
             cap = _round_capacity(est_groups, self.safety)
-        n, kb, vb = child.capacity, 4, 4
-        p = self.profile
-        if strategy == "sort":
-            cost = len(node.aggs) * p.sort_cost(n, kb, vb)
-        elif strategy == "partition_hash":
-            # tile-partial pass (sequential) + combine sort over ~n/4 partials
-            cost = (2 * n * (kb + vb) / p.seq_bw
-                    + len(node.aggs) * p.sort_cost(max(n // 4, 1), kb, vb))
-        else:  # scatter
-            cost = len(node.aggs) * p.gather_cost(n, vb, clustered=False)
+        cost = predict_groupby_time(child.capacity, len(node.aggs), strategy,
+                                    self.profile)
         col_stats = {node.key: ks} if ks else {}
         return PGroupBy(
             est_rows=min(est_groups, cap), capacity=cap, cost=cost,

@@ -43,12 +43,19 @@ class ColumnStats:
     can only remove key values), and every capacity consumer combines it
     with `min(distinct, surviving_rows)` — shrinking it by selectivity
     would under-size capacities for duplicated keys (a filter that keeps
-    10% of rows usually keeps ~all keys when each key has many rows)."""
+    10% of rows usually keeps ~all keys when each key has many rows).
+
+    `integer` records the sketched column's dtype kind. It survives
+    propagation through joins/projections (they never change a carried
+    column's dtype), which lets the group-by chooser route *derived* key
+    columns — where no base-table origin is traceable — to the hash-bucketed
+    'partition' strategy only when the keys are radix-hashable integers."""
 
     distinct: float
     min: float
     max: float
     zipf: float  # estimated skew exponent; 0 = uniform
+    integer: bool = True  # dtype kind of the sketched column
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +164,7 @@ def collect_column_stats(col: jax.Array, *, sample: int = DEFAULT_SAMPLE,
         min=float(jnp.min(col)),
         max=float(jnp.max(col)),
         zipf=estimate_zipf(col, 2 * sample, seed),
+        integer=bool(jnp.issubdtype(col.dtype, jnp.integer)),
     )
 
 

@@ -325,6 +325,24 @@ def test_groupby_build_side_keeps_full_match_ratio():
     assert int(count) == 30_000  # every probe row matches a group
 
 
+def test_groupby_partition_guarded_by_provable_multiplicity():
+    """A single heavy key hides from the sampled zipf/distinct sketches, but
+    the plain partition path would silently drop its block overhang — the
+    planner must demand the exact max-multiplicity proof (like the m:n PHJ
+    guard) and fall back to the always-exact sort."""
+    rng = np.random.default_rng(11)
+    keys = np.concatenate([np.arange(18_000, dtype=np.int64) * 97 % (1 << 30),
+                           np.full(2_000, 5, np.int64)]).astype(np.int32)
+    rng.shuffle(keys)
+    t = Table({"k": jnp.asarray(keys), "v": jnp.ones(keys.size, jnp.float32)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").group_by("k", v="sum"), cat, **OPT)
+    assert plan.root.strategy == "sort", plan.root.rationale
+    assert "multiplicity" in plan.root.rationale
+    _, count = plan.run()
+    assert int(count) == len(set(keys.tolist()))
+
+
 def test_groupby_float_keys_never_scatter():
     """Float keys would be int-floored by the scatter accumulator, merging
     distinct groups; the planner must route them to a sort-based strategy."""
@@ -566,7 +584,9 @@ def test_groupby_strategy_reacts_to_key_domain():
     p_dense = optimize(scan("dense").group_by("k", v="sum"), cat, **OPT)
     p_sparse = optimize(scan("sparse").group_by("k", v="sum"), cat, **OPT)
     assert p_dense.root.strategy == "scatter"
-    assert p_sparse.root.strategy == "sort"
+    # sparse high-cardinality integer keys: the paper's partition-based
+    # algorithm — and its plain (jit-safe) path must be exact end to end
+    assert p_sparse.root.strategy == "partition"
     # both produce correct group counts
     _, c_dense = p_dense.run()
     assert int(c_dense) == len(set(np.asarray(dense["k"]).tolist()))

@@ -1,0 +1,193 @@
+"""One-permutation materialization layer (DESIGN.md §8): composed multi-pass
+permutations equal the direct stable partition, apply_permutation matches the
+payload-carrying primitives, and every sort/partition path hands back int32
+layout arrays (hypothesis properties + fixed cases)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import primitives as prim
+from repro.kernels import ops as kops
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_multi_pass_plan_equals_direct_stable_partition(n, bits, seed):
+    """Composing stable <=8-bit passes (carrying only digit+iota) must equal
+    the single stable partition on all bits — the §4.3 stability argument the
+    whole layer rests on."""
+    rng = np.random.default_rng(seed)
+    digits = jnp.asarray(rng.integers(0, 1 << bits, n).astype(np.int32))
+    direct, off_d, sz_d = prim.plan_partition_permutation(digits, 1 << bits)
+    composed, off_c, sz_c = prim.plan_partition_permutation(
+        digits, 1 << bits, max_pass_bits=8)
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(composed))
+    np.testing.assert_array_equal(np.asarray(off_d), np.asarray(off_c))
+    np.testing.assert_array_equal(np.asarray(sz_d), np.asarray(sz_c))
+    # and both equal numpy's stable argsort
+    np.testing.assert_array_equal(
+        np.asarray(direct), np.argsort(np.asarray(digits), kind="stable"))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 1500), total_bits=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_one_permutation_multi_pass_partition(n, total_bits, seed):
+    """multi_pass_radix_partition (now one gather per column) must equal the
+    payload-free plan applied per column."""
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32))
+    v1 = jnp.arange(n, dtype=jnp.int32)
+    v2 = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    ko, v1o, v2o, off, sz = prim.multi_pass_radix_partition(
+        keys, v1, v2, total_bits=total_bits)
+    digits = prim.radix_digits(keys, 0, total_bits)
+    perm, off2, sz2 = prim.plan_partition_permutation(digits, 1 << total_bits)
+    np.testing.assert_array_equal(np.asarray(ko),
+                                  np.asarray(prim.apply_permutation(perm, keys)))
+    np.testing.assert_array_equal(np.asarray(v1o),
+                                  np.asarray(prim.apply_permutation(perm, v1)))
+    np.testing.assert_array_equal(np.asarray(v2o),
+                                  np.asarray(prim.apply_permutation(perm, v2)))
+    np.testing.assert_array_equal(np.asarray(off), np.asarray(off2))
+    # stability: within each partition original positions stay increasing
+    d_out = np.asarray(prim.radix_digits(ko, 0, total_bits))
+    v1_np = np.asarray(v1o)
+    assert (np.diff(d_out) >= 0).all()
+    for p in np.unique(d_out):
+        seg = v1_np[d_out == p]
+        assert (np.diff(seg) > 0).all() if len(seg) > 1 else True
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+def test_plan_sort_permutation_matches_sort_pairs(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, max(n // 3, 2), n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    sk, perm = prim.plan_sort_permutation(keys)
+    sk2, sv2 = prim.sort_pairs(keys, vals)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sk2))
+    np.testing.assert_array_equal(
+        np.asarray(prim.apply_permutation(perm, vals)), np.asarray(sv2))
+    # a second payload costs one gather and agrees with a joint sort
+    vals2 = jnp.arange(n, dtype=jnp.int32)
+    _, _, sv3 = prim.sort_pairs(keys, vals, vals2)
+    np.testing.assert_array_equal(
+        np.asarray(prim.apply_permutation(perm, vals2)), np.asarray(sv3))
+
+
+def test_apply_permutation_return_shape(rng):
+    perm = jnp.asarray([2, 0, 1], jnp.int32)
+    a = jnp.asarray([10, 20, 30], jnp.int32)
+    b = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    single = prim.apply_permutation(perm, a)
+    assert isinstance(single, jnp.ndarray)
+    pair = prim.apply_permutation(perm, a, b)
+    assert isinstance(pair, tuple) and len(pair) == 2
+
+
+# ---------------------------------------------------------------------------
+# "One gather per column" is measurable: however wide the payload, each
+# sort/partition path traces exactly as many sort ops as it has key plans
+# ---------------------------------------------------------------------------
+def _count_sorts(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "sort":
+            n += 1
+        for sub in eqn.params.values():
+            if hasattr(sub, "jaxpr"):
+                n += _count_sorts(sub.jaxpr)
+    return n
+
+
+def _wide_tables(rng, n=512, cols=4):
+    import jax.numpy as jnp
+    from repro.core import Table
+
+    def make(seed):
+        r = np.random.default_rng(seed)
+        d = {"k": jnp.asarray(r.integers(0, 64, n).astype(np.int32))}
+        for j in range(cols):
+            d[f"v{seed}{j}"] = jnp.asarray(r.normal(size=n).astype(np.float32))
+        return Table(d)
+
+    return make(1), make(2)
+
+
+def test_groupby_sort_plans_one_sort_regardless_of_payload_width(rng):
+    import jax
+    from repro.core import group_aggregate
+
+    t, _ = _wide_tables(rng)
+    aggs = {c: "sum" for c in t.column_names if c != "k"}
+    jaxpr = jax.make_jaxpr(lambda tb: group_aggregate(
+        tb, key="k", aggs=aggs, num_groups=128, strategy="sort"))(t)
+    assert _count_sorts(jaxpr.jaxpr) == 1
+
+
+def test_smj_gftr_plans_one_sort_per_side_regardless_of_payload_width(rng):
+    import jax
+    from repro.core import smj_join
+
+    R, S = _wide_tables(rng)
+    jaxpr = jax.make_jaxpr(lambda a, b: smj_join(
+        a, b, key="k", pattern="gftr", mode="mn", out_size=2048))(R, S)
+    assert _count_sorts(jaxpr.jaxpr) == 2
+
+
+def test_phj_gftr_plans_one_partition_per_side_regardless_of_payload_width(rng):
+    import jax
+    from repro.core import phj_join
+
+    R, S = _wide_tables(rng)
+    jaxpr = jax.make_jaxpr(lambda a, b: phj_join(
+        a, b, key="k", pattern="gftr", mode="mn", out_size=2048))(R, S)
+    assert _count_sorts(jaxpr.jaxpr) == 2
+
+
+def test_groupby_partition_plans_one_partition_sort(rng):
+    import jax
+    from repro.core import group_aggregate
+
+    t, _ = _wide_tables(rng)
+    aggs = {c: "sum" for c in t.column_names if c != "k"}
+    jaxpr = jax.make_jaxpr(lambda tb: group_aggregate(
+        tb, key="k", aggs=aggs, num_groups=128, strategy="partition"))(t)
+    # one plan sort (digits, carried key, iota) + one block-local sort;
+    # payload width never adds sorts
+    assert _count_sorts(jaxpr.jaxpr) == 2
+
+
+# ---------------------------------------------------------------------------
+# Layout dtype contract: offsets/sizes are int32 on every path
+# ---------------------------------------------------------------------------
+def _assert_int32(*arrays):
+    for a in arrays:
+        assert a.dtype == jnp.int32, a.dtype
+
+
+def test_layout_dtypes_are_int32(rng):
+    digits = jnp.asarray(rng.integers(0, 64, 500).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, 1 << 16, 500).astype(np.int32))
+
+    perm, off, sz = prim.partition_permutation(digits, 64)
+    _assert_int32(perm, off, sz)
+    perm, off, sz = prim.plan_partition_permutation(digits, 64)
+    _assert_int32(perm, off, sz)
+    perm, off, sz = prim.plan_partition_permutation(digits, 64, max_pass_bits=4)
+    _assert_int32(perm, off, sz)
+    *_, off, sz = prim.multi_pass_radix_partition(keys, total_bits=12)
+    _assert_int32(off, sz)
+    *_, off, sz = prim.radix_partition(keys, start_bit=0, num_bits=6)
+    _assert_int32(off, sz)
+    for impl in ("pallas", "xla"):
+        dest, off, sz = kops.partition_ranks(digits, 64, impl)
+        _assert_int32(dest, off, sz)
+    _, perm = prim.plan_sort_permutation(keys)
+    _assert_int32(perm)

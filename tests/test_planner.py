@@ -11,7 +11,8 @@ import pytest
 
 from repro.core import JoinStats, choose_algorithm, choose_smj_pattern
 from repro.core.groupby import choose_groupby_strategy
-from repro.core.planner import PrimitiveProfile, predict_join_time
+from repro.core.planner import (PrimitiveProfile, predict_groupby_time,
+                                predict_join_time)
 from repro.data import relgen
 from repro.engine import stats as est
 
@@ -84,9 +85,64 @@ def test_groupby_chooser_duplication_partition_hash():
     assert s == "partition_hash"
 
 
-def test_groupby_chooser_high_cardinality_sort():
+def test_groupby_chooser_high_cardinality_partition():
+    """The paper's partition-based algorithm owns the high-cardinality,
+    integer-key regime (radix passes scale with log(groups), not key width)."""
     s, why = choose_groupby_strategy(100_000, 60_000, key_min=0, key_max=1 << 30)
+    assert s == "partition" and "cardinality" in why
+
+
+def test_groupby_chooser_high_cardinality_float_keys_sort():
+    """Non-integer keys cannot be radix-bucketed by value hash; sort stays
+    the robust high-cardinality fallback."""
+    s, why = choose_groupby_strategy(100_000, 60_000, key_min=0.0,
+                                     key_max=1e9, integer_key=False)
     assert s == "sort"
+
+
+# ---------------------------------------------------------------------------
+# Group-by cost model
+# ---------------------------------------------------------------------------
+def test_predict_groupby_time_all_strategies_finite():
+    prof = PrimitiveProfile()
+    for strat in ("sort", "sort_pallas", "partition", "partition_hash",
+                  "scatter"):
+        t = predict_groupby_time(1 << 18, 2, strat, prof)
+        assert np.isfinite(t) and t > 0, (strat, t)
+    with pytest.raises(ValueError):
+        predict_groupby_time(1000, 1, "nope")
+
+
+def test_predict_groupby_partition_passes_scale_with_cardinality_not_key_width():
+    """The modeled crossover: sort pays key-width-many radix passes (8 for
+    int64), partition pays ceil(log2(partitions)/8) regardless of key width
+    — so widening the key must widen sort's cost but not partition's."""
+    prof = PrimitiveProfile()
+    n = 1 << 20
+    assert (predict_groupby_time(n, 2, "partition", prof, key_bytes=8)
+            < predict_groupby_time(n, 2, "sort", prof, key_bytes=8))
+    d_part = (predict_groupby_time(n, 2, "partition", prof, key_bytes=8)
+              - predict_groupby_time(n, 2, "partition", prof, key_bytes=4))
+    d_sort = (predict_groupby_time(n, 2, "sort", prof, key_bytes=8)
+              - predict_groupby_time(n, 2, "sort", prof, key_bytes=4))
+    assert d_part < d_sort  # only the pass structure, not one gather, widens
+
+
+def test_predict_join_time_gftr_lazy_transform_is_single_gather():
+    """One-permutation materialization: an extra gftr payload column is
+    charged as exactly one n-row permutation gather + one clustered output
+    gather — what the implementation now does — not the key+payload
+    re-sort/re-partition the executable paths no longer run."""
+    prof = PrimitiveProfile()
+    st_ = JoinStats(1 << 18, 1 << 18, 3, 3)
+    extra_col = (predict_join_time(st_, "phj", "gftr", prof)["materialize"]
+                 - predict_join_time(
+                     dataclasses.replace(st_, r_payload_cols=2),
+                     "phj", "gftr", prof)["materialize"])
+    gather = prof.gather_cost(st_.n_r, st_.payload_bytes, clustered=False)
+    out_gather = prof.gather_cost(int(st_.n_s * st_.match_ratio),
+                                  st_.payload_bytes, clustered=True)
+    assert abs(extra_col - (gather + out_gather)) < 1e-12
 
 
 # ---------------------------------------------------------------------------
