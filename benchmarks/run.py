@@ -6,9 +6,11 @@ Runs either way:
     python -m benchmarks.run [section-prefix]
     python -m benchmarks.run --list      # print section tags, run nothing
 
-Whenever any ``groupby/*`` section runs, a machine-readable
-``BENCH_groupby.json`` ({name: us_per_call}) is written next to the CSV
-output (cwd) so successive PRs have a perf trajectory to regress against.
+Machine-readable perf trajectories are written next to the CSV output
+(cwd) whenever their sections run, so successive PRs can regress against
+them: ``BENCH_groupby.json`` (``groupby/*``), ``BENCH_joins.json``
+(``fig*``/``table*`` join sections), ``BENCH_groupjoin.json``
+(``groupjoin/*`` fused-path sections) — each ``{name: us_per_call}``.
 
 Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
 runs use 2^27 rows — same code, larger constant)."""
@@ -34,7 +36,8 @@ for _p in _paths:
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import joins, groupby_bench, integration_bench, engine_bench
+    from benchmarks import (joins, groupby_bench, groupjoin_bench,
+                            integration_bench, engine_bench)
     from benchmarks.common import ROWS
 
     sections = [
@@ -51,6 +54,8 @@ def main() -> None:
         ("fig16", joins.fig16_join_sequences),
         ("fig17", joins.fig17_tpc),
         ("fig18", joins.fig18_planner),
+        ("groupjoin/fused", groupjoin_bench.fused_vs_unfused),
+        ("groupjoin/engine", groupjoin_bench.engine_fusion),
         ("groupby/cardinality", groupby_bench.cardinality_sweep),
         ("groupby/skew", groupby_bench.skew_sweep),
         ("groupby/wide", groupby_bench.wide_payload),
@@ -76,13 +81,21 @@ def main() -> None:
         fn()
     print(f"# total_wall_s,{time.time()-t0:.1f},{len(ROWS)} rows")
 
-    groupby_rows = {name: us for name, us, _ in ROWS if name.startswith("groupby")}
-    if groupby_rows:
-        import json
+    # machine-readable perf trajectories, one file per operator family
+    # ({name: us_per_call}); a file is written whenever any of its rows ran
+    files = {
+        "BENCH_groupby.json": lambda n: n.startswith("groupby"),
+        "BENCH_joins.json": lambda n: n.startswith(("fig", "table")),
+        "BENCH_groupjoin.json": lambda n: n.startswith("groupjoin"),
+    }
+    for fname, pred in files.items():
+        rows = {name: us for name, us, _ in ROWS if pred(name)}
+        if rows:
+            import json
 
-        with open("BENCH_groupby.json", "w") as f:
-            json.dump(groupby_rows, f, indent=2, sort_keys=True)
-        print(f"# wrote BENCH_groupby.json,{len(groupby_rows)},rows")
+            with open(fname, "w") as f:
+                json.dump(rows, f, indent=2, sort_keys=True)
+            print(f"# wrote {fname},{len(rows)},rows")
 
 
 if __name__ == "__main__":

@@ -21,3 +21,11 @@ REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run groupby/partition > /dev/null
 test -s BENCH_groupby.json
 echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json)"
+
+# Smoke-scale fused group-join benchmark: exercises the probe+accumulate
+# path (fused vs join-then-group-by) end to end and leaves
+# BENCH_groupjoin.json as its perf trajectory.
+REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run groupjoin > /dev/null
+test -s BENCH_groupjoin.json
+echo "ci: smoke-scale groupjoin benchmark OK (BENCH_groupjoin.json)"

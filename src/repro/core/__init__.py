@@ -13,9 +13,11 @@ from .groupby import (group_aggregate, groupby_sort, groupby_partition,
                       groupby_partition_hash, groupby_scatter,
                       groupby_sort_pallas, choose_groupby_strategy,
                       choose_groupby_partition_bits)
+from .groupjoin import (phj_groupjoin, groupjoin_checked,
+                        groupjoin_overflowed, groupjoin_required_groups)
 from .planner import (JoinStats, choose_algorithm, choose_smj_pattern,
                       PrimitiveProfile, predict_join_time,
-                      predict_groupby_time)
+                      predict_groupby_time, predict_groupjoin_time)
 from .memmodel import peak_memory, peak_memory_bytes, gfur_ledger, gftr_ledger
 from . import primitives
 
@@ -29,8 +31,11 @@ __all__ = [
     "groupby_partition_checked", "groupby_partition_overflowed",
     "groupby_partition_hash", "groupby_scatter", "groupby_sort_pallas",
     "choose_groupby_strategy", "choose_groupby_partition_bits",
+    "phj_groupjoin", "groupjoin_checked", "groupjoin_overflowed",
+    "groupjoin_required_groups",
     "JoinStats", "choose_algorithm", "choose_smj_pattern",
     "PrimitiveProfile", "predict_join_time", "predict_groupby_time",
+    "predict_groupjoin_time",
     "peak_memory", "peak_memory_bytes", "gfur_ledger", "gftr_ledger",
     "primitives",
 ]

@@ -78,16 +78,25 @@ def _chunked(f, arr_len, chunk, *arrays):
 # ---------------------------------------------------------------------------
 # Build-side padded blocks
 # ---------------------------------------------------------------------------
+def blocked_partitions(arr_part: jax.Array, off: jax.Array, sz: jax.Array,
+                       cap: int, fill):
+    """Pad each contiguous partition of a partitioned column to `cap` rows:
+    (P, cap) blocks where slot (p, i) holds the i-th row of partition p and
+    out-of-partition slots carry `fill`. The single home of the padding
+    geometry — key blocks, virtual-ID blocks, and the group-join's value
+    blocks must all agree on it."""
+    i = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    idx = off[:, None].astype(jnp.int32) + i
+    valid = i < sz[:, None]
+    idx_c = jnp.clip(idx, 0, arr_part.shape[0] - 1)
+    return jnp.where(valid, jnp.take(arr_part, idx_c), fill), idx, valid
+
+
 def build_blocks(keys_part: jax.Array, off: jax.Array, sz: jax.Array, cap: int):
     """Pad each contiguous partition to `cap` rows -> (P, cap) key blocks and
     (P, cap) virtual-ID blocks (positions in the partitioned array).
     Returns (bkeys, bvids, overflow)."""
-    P = off.shape[0]
-    i = jnp.arange(cap, dtype=jnp.int32)[None, :]
-    idx = off[:, None].astype(jnp.int32) + i
-    valid = i < sz[:, None]
-    idx_c = jnp.clip(idx, 0, keys_part.shape[0] - 1)
-    bkeys = jnp.where(valid, jnp.take(keys_part, idx_c), KEY_SENTINEL)
+    bkeys, idx, valid = blocked_partitions(keys_part, off, sz, cap, KEY_SENTINEL)
     bvids = jnp.where(valid, idx, -1)
     overflow = jnp.max(sz) > cap
     return bkeys, bvids, overflow
@@ -154,7 +163,6 @@ def phj_join(
     build_block: int = BUILD_BLOCK,
     partition_bits: int | None = None,
     hash_keys: bool = True,
-    reuse_transform_perm: bool = False,
     probe_chunk: int = 8192,
     probe_impl: str = "xla",  # "xla" | "pallas" (co-partition probe kernel)
     gather_impl: str = "xla",  # "xla" | "pallas" (windowed clustered gather)
@@ -239,10 +247,6 @@ def phj_join(
     else:
         raise ValueError(f"unknown pattern {pattern!r}")
 
-    del reuse_transform_perm  # kept for API compatibility: GFTR always
-    # reuses the planned permutation now (the per-column re-partition it
-    # used to gate is gone; determinism makes the outputs identical and the
-    # cost model charges the single-gather transform — planner.py).
     return Table(cols), count
 
 
@@ -256,18 +260,36 @@ def phj_overflowed(R: Table, *, key: str = "k", build_block: int = 256,
     return bool(jnp.max(sizes) > build_block), p_bits
 
 
-def phj_join_checked(R: Table, S: Table, *, key: str = "k", max_extra_bits: int = 4,
-                     build_block: int = 256, **kw):
-    """phj_join with automatic fan-out escalation on build-partition
-    overflow (deterministic: the check is a cheap histogram, the re-run uses
-    strictly more bits — the paper's multi-pass partitioning policy)."""
+def escalate_partition_bits(R: Table, *, key: str = "k",
+                            build_block: int = 256,
+                            partition_bits: int | None = None,
+                            hash_keys: bool = True,
+                            max_extra_bits: int = 4) -> int:
+    """Resolved fan-out after the checked drivers' escalation policy: add
+    partition bits while any build co-partition would overflow its padded
+    block (separating co-hashed distinct keys — the paper's multi-pass
+    policy). Deterministic: each check is a cheap histogram, each retry
+    uses strictly more bits. Shared by `phj_join_checked` and
+    `groupjoin_checked`."""
     overflow, p_bits = phj_overflowed(R, key=key, build_block=build_block,
-                                      partition_bits=kw.get("partition_bits"))
+                                      partition_bits=partition_bits,
+                                      hash_keys=hash_keys)
     extra = 0
     while overflow and extra < max_extra_bits:
         extra += 1
         overflow, _ = phj_overflowed(R, key=key, build_block=build_block,
-                                     partition_bits=p_bits + extra)
-    kw.pop("partition_bits", None)
+                                     partition_bits=p_bits + extra,
+                                     hash_keys=hash_keys)
+    return p_bits + extra
+
+
+def phj_join_checked(R: Table, S: Table, *, key: str = "k", max_extra_bits: int = 4,
+                     build_block: int = 256, **kw):
+    """phj_join with automatic fan-out escalation on build-partition
+    overflow (`escalate_partition_bits`)."""
+    p_bits = escalate_partition_bits(
+        R, key=key, build_block=build_block,
+        partition_bits=kw.pop("partition_bits", None),
+        hash_keys=kw.get("hash_keys", True), max_extra_bits=max_extra_bits)
     return phj_join(R, S, key=key, build_block=build_block,
-                    partition_bits=p_bits + extra, **kw)
+                    partition_bits=p_bits, **kw)

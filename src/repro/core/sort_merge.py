@@ -70,8 +70,6 @@ def smj_join(
     pattern: str = "gftr",  # "gftr" (SMJ-OM) | "gfur" (SMJ-UM)
     out_size: int | None = None,
     mode: str = "pk_fk",  # "pk_fk" | "mn"
-    reuse_transform_perm: bool = False,  # compat no-op: the one-permutation
-    # layer always sorts keys once and applies the perm per column now
     find_impl: str = "xla",  # "xla" | "pallas" (windowed lower-bound kernel)
 ):
     """End-to-end sort-merge join. Returns (Table, valid_count).
@@ -86,7 +84,7 @@ def smj_join(
     if pattern == "gfur":
         return _smj_gfur(R, S, key, r_pay, s_pay, out_size, mode, find_impl)
     if pattern == "gftr":
-        return _smj_gftr(R, S, key, r_pay, s_pay, out_size, mode, reuse_transform_perm, find_impl)
+        return _smj_gftr(R, S, key, r_pay, s_pay, out_size, mode, find_impl)
     raise ValueError(f"unknown pattern {pattern!r}")
 
 
@@ -134,13 +132,10 @@ def _smj_gfur(R, S, key, r_pay, s_pay, out_size, mode, find_impl="xla"):
     return Table(cols), count
 
 
-def _smj_gftr(R, S, key, r_pay, s_pay, out_size, mode, reuse_perm, find_impl="xla"):
+def _smj_gftr(R, S, key, r_pay, s_pay, out_size, mode, find_impl="xla"):
     # Algorithm 1 with the one-permutation refinement (DESIGN.md §8): the
     # key sort is planned ONCE per relation, and every payload column —
     # first or lazy — is transformed with a single apply_permutation gather.
-    # (`reuse_perm` is kept for API compatibility; the per-column re-sort it
-    # used to gate is gone — stability made the outputs identical anyway.)
-    del reuse_perm
     kr, perm_r = prim.plan_sort_permutation(R[key])
     ks, perm_s = prim.plan_sort_permutation(S[key])
     tr = {n: prim.apply_permutation(perm_r, R[n]) for n in r_pay[:1]}

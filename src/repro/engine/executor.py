@@ -20,7 +20,7 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core import group_aggregate, join
+from repro.core import group_aggregate, join, phj_groupjoin
 from repro.core import primitives as prim
 from repro.core.table import KEY_SENTINEL, Table
 
@@ -54,6 +54,8 @@ def execute(node: P.PhysNode, tables: Mapping[str, Table]):
         return _join(node, tables)
     if isinstance(node, P.PGroupBy):
         return _group_by(node, tables)
+    if isinstance(node, P.PGroupJoin):
+        return _group_join(node, tables)
     if isinstance(node, P.POrderByLimit):
         return _order_by(node, tables)
     raise TypeError(f"unknown physical node {type(node).__name__}")
@@ -93,6 +95,34 @@ def _group_by(node: P.PGroupBy, tables):
         key=node.key, aggs=dict(node.aggs), num_groups=node.capacity,
         strategy=node.strategy,
     )
+
+
+def _group_join(node: P.PGroupJoin, tables):
+    """Fused join + grouped aggregation: the probe's matches feed the
+    accumulator directly (core.groupjoin), so only the key, group-key, and
+    aggregate-input columns are ever touched — the join output never
+    exists."""
+    bt, b_count = execute(node.build, tables)
+    pt, p_count = execute(node.probe, tables)
+    bt = _mask_key(bt, b_count, node.build_key)
+    pt = _mask_key(pt, p_count, node.probe_key)
+    key = node.probe_key
+    if node.build_key != key:
+        bt = bt.rename({node.build_key: key})
+    agg_cols = [c for c, _ in node.aggs]
+    b_need = dict.fromkeys([key] + [c for c in agg_cols if c in bt])
+    p_need = dict.fromkeys([key, node.probe_group_key]
+                           + [c for c in agg_cols if c in pt])
+    out, count = phj_groupjoin(
+        bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
+        group_key=node.probe_group_key, aggs=dict(node.aggs),
+        num_groups=node.capacity, agg_strategy=node.agg_strategy,
+    )
+    if node.group_key != node.probe_group_key:
+        # logical schema names the group column after the GroupBy key (the
+        # equal-valued build-key alias); restore it
+        out = out.rename({node.probe_group_key: node.group_key})
+    return out, count
 
 
 def _order_by(node: P.POrderByLimit, tables):

@@ -39,7 +39,7 @@ from repro.core.groupby import PARTITION_ROW_BLOCK, choose_groupby_strategy
 from repro.core.hash_join import BUILD_BLOCK
 from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm,
                                 choose_smj_pattern, predict_groupby_time,
-                                predict_join_time)
+                                predict_groupjoin_time, predict_join_time)
 
 from . import logical as L
 from . import stats as S
@@ -200,6 +200,38 @@ class PGroupBy(PhysNode):
 
 
 @dataclasses.dataclass
+class PGroupJoin(PhysNode):
+    """Fused join + grouped aggregation (core.groupjoin.phj_groupjoin):
+    the probe feeds a group-keyed accumulator directly, the joined row is
+    never materialized. Emitted by the fusion pass when a GroupBy sits on a
+    provably pk_fk join, the group key and every aggregate input survive
+    the join, and the cost model prices the fusion below the unfused
+    join + group-by pair. Capacity is the GROUP-domain estimate (like
+    PGroupBy), never the join-output capacity."""
+    build: PhysNode = None
+    probe: PhysNode = None
+    build_key: str = ""
+    probe_key: str = ""
+    group_key: str = ""  # output column name (the logical GroupBy key)
+    probe_group_key: str = ""  # probe-side column actually grouped on
+    aggs: tuple = ()
+    agg_strategy: str = "sort"
+    rationale: str = ""
+    join_stats: JoinStats | None = None
+    phase_times: dict | None = None
+
+    def children(self):
+        return (self.build, self.probe)
+
+    def describe(self):
+        a = ", ".join(f"{op}({c})" for c, op in self.aggs)
+        return (f"GroupJoin[phj+{self.agg_strategy} pk_fk] "
+                f"key={self.group_key} aggs=({a}) "
+                f"groups~{int(self.est_rows)} cap={self.capacity} "
+                f"cost={self.cost*1e6:.0f}us why: {self.rationale}")
+
+
+@dataclasses.dataclass
 class POrderByLimit(PhysNode):
     child: PhysNode = None
     key: str = ""
@@ -232,7 +264,8 @@ class PhysicalPlan:
             ext = "   " if is_last else "│  "
             kids = node.children()
             labels = (
-                ("build", "probe") if isinstance(node, PJoin) else ("",) * len(kids)
+                ("build", "probe") if isinstance(node, (PJoin, PGroupJoin))
+                else ("",) * len(kids)
             )
             for i, (k, klab) in enumerate(zip(kids, labels)):
                 walk(k, prefix + ext, i == len(kids) - 1, klab)
@@ -649,21 +682,26 @@ class Optimizer:
         return "int32"
 
     # -- group-by / order-by ------------------------------------------------
-    def _group_by(self, node: L.GroupBy) -> PGroupBy:
-        child = self._build(node.child)
-        ks = child.col_stats.get(node.key)
-        est_groups = min(ks.distinct if ks else child.est_rows, child.est_rows)
+    def _groupby_choice(self, src: PhysNode, key: str):
+        """Group-by strategy, PR-3 partition guard, and accumulator sizing
+        over `src`'s rows/statistics — shared by PGroupBy and the fusion
+        pass (which applies it to the join's PROBE side: masking unmatched
+        rows only removes rows, so every proof below still holds there).
+
+        Returns (strategy, rationale, est_groups, cap, ks)."""
+        ks = src.col_stats.get(key)
+        est_groups = min(ks.distinct if ks else src.est_rows, src.est_rows)
         # scatter indexes the accumulator BY key value and partition radix-
         # buckets hashed key bits: only provably integer keys qualify
         # (int32-casting floats would merge groups). Base-table origin is the
         # primary proof; for derived keys the propagated ColumnStats carries
         # the sketched dtype kind.
-        origin = child.origins.get(node.key)
+        origin = src.origins.get(key)
         integer_key = (origin is not None and np.issubdtype(
             np.dtype(self.catalog.tables[origin[0]][origin[1]].dtype),
             np.integer)) or (origin is None and ks is not None and ks.integer)
         strategy, rationale = choose_groupby_strategy(
-            int(child.est_rows), est_groups,
+            int(src.est_rows), est_groups,
             key_min=ks.min if ks else None,
             key_max=ks.max if ks else None,
             zipf=ks.zipf if ks else 0.0,
@@ -677,11 +715,10 @@ class Optimizer:
             # same PROOF the m:n join guard uses: an exact max-multiplicity
             # bound from the base table. Not provable (derived/fanned-out
             # key) or too heavy -> fall back to the always-exact sort.
-            chain = self._scan_chain(child)
-            o_k = child.origins.get(node.key)
-            if (chain is not None and o_k is not None
-                    and chain[0] == o_k[0]):
-                mult = self.catalog.max_multiplicity(o_k, chain[1])
+            chain = self._scan_chain(src)
+            if (chain is not None and origin is not None
+                    and chain[0] == origin[0]):
+                mult = self.catalog.max_multiplicity(origin, chain[1])
             else:
                 mult = float("inf")
             if mult > PARTITION_ROW_BLOCK // 4:
@@ -696,8 +733,27 @@ class Optimizer:
             cap = _round_capacity(float(ks.max) + 1, 1.0)
         else:
             cap = _round_capacity(est_groups, self.safety)
+        return strategy, rationale, est_groups, cap, ks
+
+    def _group_by(self, node: L.GroupBy) -> PGroupBy:
+        child = self._build(node.child)
+        strategy, rationale, est_groups, cap, ks = self._groupby_choice(
+            child, node.key)
         cost = predict_groupby_time(child.capacity, len(node.aggs), strategy,
                                     self.profile)
+        # Fusion pass: a GroupBy directly over a provably pk_fk join can
+        # fold the aggregation into the probe (core.groupjoin) and skip the
+        # join materialization round trip entirely. Price both plans; keep
+        # whichever the cost model favors, and surface the decision either
+        # way so explain() shows it.
+        fused = self._try_fuse_group_join(node, child,
+                                          unfused_cost=child.cost + cost)
+        if fused is not None:
+            if fused.cost < child.cost + cost:
+                return fused
+            rationale += (
+                f"; fusion rejected: GroupJoin {fused.cost*1e6:.0f}us >= "
+                f"join+group-by {(child.cost + cost)*1e6:.0f}us")
         col_stats = {node.key: ks} if ks else {}
         return PGroupBy(
             est_rows=min(est_groups, cap), capacity=cap, cost=cost,
@@ -707,6 +763,68 @@ class Optimizer:
             known_unique=frozenset({node.key}),  # one row per group
             child=child, key=node.key, aggs=tuple(node.aggs),
             strategy=strategy, rationale=rationale,
+        )
+
+    def _try_fuse_group_join(self, node: L.GroupBy, child: PhysNode,
+                             unfused_cost: float) -> "PGroupJoin | None":
+        """PGroupJoin candidate for GroupBy(Join(...)): the group key and
+        every aggregate input must survive the join, and the join must be
+        provably pk_fk (the fused probe takes one match per probe row; an
+        m:n fan-out would silently drop aggregate contributions). Returns
+        None when the pattern doesn't match; the CALLER prices the
+        candidate against the unfused plan — `unfused_cost` only feeds the
+        rationale string."""
+        if self.force_join is not None or not isinstance(child, PJoin):
+            return None
+        if child.mode != "pk_fk" or child.algorithm != "phj":
+            return None
+        build, probe = child.build, child.probe
+        bk, pk = child.build_key, child.probe_key
+        # group key must be probe-side; the build-key alias carries the same
+        # probe-surviving values, so it qualifies via the probe key. A probe
+        # column SHADOWING the build-key name cannot reach here: the join
+        # name-collision check (logical.output_columns / _make_join) rejects
+        # that plan outright when bk != pk, and when bk == pk the two
+        # branches below coincide.
+        if node.key in probe.columns:
+            probe_gk = node.key
+        elif node.key == bk:
+            probe_gk = pk
+        else:
+            return None
+        # aggregate inputs survive on one side (the bk alias is excluded:
+        # its values live on the probe side under a different name)
+        for c, _ in node.aggs:
+            if c not in probe.columns and (c not in build.columns or c == bk):
+                return None
+
+        # strategy + capacity from the shared chooser, applied to the PROBE
+        # side: the accumulator is GROUP-domain sized (never join-output
+        # sized), and the integer-key / PR-3 partition-multiplicity proofs
+        # transfer unchanged — masking unmatched rows only removes rows
+        strategy, _, est_groups, cap, ks = self._groupby_choice(probe,
+                                                                probe_gk)
+        build_aggs = sum(1 for c, _ in node.aggs if c not in probe.columns)
+        phases = predict_groupjoin_time(child.join_stats, len(node.aggs),
+                                        strategy, self.profile,
+                                        group_key_carried=(probe_gk == pk),
+                                        build_aggs=build_aggs)
+        rationale = (
+            f"fused: probe feeds the accumulator, join never materialized; "
+            f"GroupJoin {phases['total']*1e6:.0f}us vs join+group-by "
+            f"{unfused_cost*1e6:.0f}us")
+        return PGroupJoin(
+            est_rows=min(est_groups, cap), capacity=cap,
+            cost=phases["total"],
+            columns=(node.key,) + tuple(f"{c}_{op}" for c, op in node.aggs),
+            col_stats={node.key: ks} if ks else {},
+            origins={node.key: probe.origins.get(probe_gk)},
+            known_unique=frozenset({node.key}),  # one row per group
+            build=build, probe=probe, build_key=bk, probe_key=pk,
+            group_key=node.key, probe_group_key=probe_gk,
+            aggs=tuple(node.aggs), agg_strategy=strategy,
+            rationale=rationale, join_stats=child.join_stats,
+            phase_times=phases,
         )
 
     def _order_by(self, node: L.OrderByLimit) -> POrderByLimit:

@@ -74,6 +74,111 @@ def hash_probe_pallas(
     return vid, hit
 
 
+# ---------------------------------------------------------------------------
+# Fused probe + accumulate (group-join): the joined row never leaves VMEM
+# ---------------------------------------------------------------------------
+def _probe_agg_kernel(part_ref, probe_ref, gk_ref, pv_ref, bkeys_ref,
+                      bvals_ref, pk_ref, ps_ref, pc_ref, *, col_sides):
+    """One probe sub-block: match finding (vectorized equality against the
+    co-partition's build block) immediately followed by tile-local grouped
+    aggregation — both as matmuls, the §2 scatter-free mapping.
+
+    Instead of writing (vid, hit) per row for a later materialization pass,
+    the kernel reduces the tile to at most one (group key, partial sums,
+    partial count) tuple per distinct group: the fused analogue of the
+    GPU's shared-memory hash-table accumulator. Group assignment needs no
+    sort — each row's slot is the first row in the tile carrying the same
+    group key (a (capS x capS) equality + iota-min), and the one-hot of
+    those slots drives the reduction matmuls.
+
+    `col_sides` (static) maps each output column to its value source:
+    ("probe", j) reads pv_ref[0, j]; ("build", j) fetches the matched build
+    value from bvals_ref[0, j] via a one-hot matmul over the hit positions.
+    Match finding and group assignment run ONCE per tile no matter how many
+    aggregate columns ride the pass."""
+    del part_ref  # consumed by the BlockSpec index maps only
+    pk = probe_ref[0]  # (capS,) probe join keys
+    gk = gk_ref[0]  # (capS,) probe group keys
+    bk = bkeys_ref[0]  # (capR,) build block keys
+    cap_r = bk.shape[0]
+    cap_s = pk.shape[0]
+    eq = (pk[:, None] == bk[None, :]) & (pk[:, None] != KEY_SENTINEL)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1)
+    hitpos = jnp.where(eq, iota_r, cap_r).min(axis=1)
+    matched = hitpos < cap_r
+    # one-hot of the (unique, deterministic) first hit position: fetches any
+    # number of build value columns without leaving VMEM
+    oh_b = (iota_r == hitpos[:, None]).astype(jnp.float32)
+    gke = jnp.where(matched, gk, KEY_SENTINEL)
+    # slot of row i = first row in the tile with the same group key
+    eqg = (gke[:, None] == gke[None, :]) & (gke[:, None] != KEY_SENTINEL)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (cap_s, cap_s), 1)
+    rep = jnp.where(eqg, iota_s, cap_s).min(axis=1)
+    oh = (rep[:, None] == iota_s).astype(jnp.float32)  # (rows, slots)
+    for c, (side, j) in enumerate(col_sides):
+        if side == "build":
+            val = (oh_b * bvals_ref[0, j][None, :]).sum(axis=1)
+        else:
+            val = pv_ref[0, j]
+        ps_ref[0, c, :] = jnp.where(matched, val, 0.0) @ oh
+    counts = matched.astype(jnp.float32) @ oh
+    pc_ref[0, :] = counts.astype(jnp.int32)
+    # slot j only ever receives rows whose group key equals gke[j]
+    pk_ref[0, :] = jnp.where(counts > 0, gke, KEY_SENTINEL)
+
+
+def probe_agg_pallas(
+    bkeys: jax.Array,  # (P, capR) padded build key blocks
+    bvals: jax.Array,  # (P, Cb, capR) float32 build value blocks
+    probe_blocks: jax.Array,  # (B, capS) partition-major padded probe keys
+    gk_blocks: jax.Array,  # (B, capS) probe group keys (KEY_SENTINEL padding)
+    pv_blocks: jax.Array,  # (B, Cp, capS) float32 probe value columns
+    block_part: jax.Array,  # (B,) partition id per probe sub-block
+    *,
+    col_sides: tuple,  # static ("probe"|"build", within-side index) per output
+    interpret: bool = True,
+):
+    """Fused probe+accumulate partials over any number of aggregate value
+    columns in ONE probe pass. Returns (pkeys (B, capS), psums (B, C, capS),
+    pcounts (B, capS)): at most one live slot per distinct group per tile
+    (KEY_SENTINEL elsewhere); combine with a sorted segmented reduction."""
+    import functools
+
+    B, capS = probe_blocks.shape
+    P, capR = bkeys.shape
+    Cp = pv_blocks.shape[1]
+    Cb = bvals.shape[1]
+    C = len(col_sides)
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, capS), lambda i, part: (i, 0)),
+            pl.BlockSpec((1, capS), lambda i, part: (i, 0)),
+            pl.BlockSpec((1, Cp, capS), lambda i, part: (i, 0, 0)),
+            pl.BlockSpec((1, capR), lambda i, part: (part[i], 0)),
+            pl.BlockSpec((1, Cb, capR), lambda i, part: (part[i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capS), lambda i, part: (i, 0)),
+            pl.BlockSpec((1, C, capS), lambda i, part: (i, 0, 0)),
+            pl.BlockSpec((1, capS), lambda i, part: (i, 0)),
+        ],
+    )
+    pk, ps, pc = pl.pallas_call(
+        functools.partial(_probe_agg_kernel, col_sides=tuple(col_sides)),
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capS), gk_blocks.dtype),
+            jax.ShapeDtypeStruct((B, C, capS), jnp.float32),
+            jax.ShapeDtypeStruct((B, capS), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_part.astype(jnp.int32), probe_blocks, gk_blocks,
+      pv_blocks.astype(jnp.float32), bkeys, bvals.astype(jnp.float32))
+    return pk, ps, pc
+
+
 def layout_probe_blocks(
     keys_part: jax.Array,  # partitioned probe keys (contiguous partitions)
     off: jax.Array,

@@ -20,7 +20,7 @@ from .common import ceil_div
 from .histogram import histogram_pallas
 from .radix_partition import partition_ranks_pallas, block_histograms_pallas
 from .merge_join import lower_bound_windowed_pallas
-from .hash_probe import hash_probe_pallas, layout_probe_blocks
+from .hash_probe import hash_probe_pallas, layout_probe_blocks, probe_agg_pallas
 from .gather import gather_windowed_pallas
 from .segsum import segsum_partials_pallas
 
@@ -131,6 +131,110 @@ def hash_probe(
         hit.reshape(-1), mode="drop"
     )
     return vid_out, hit_out.astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# fused probe + accumulate (group-join)
+# ---------------------------------------------------------------------------
+def _combine_group_partials(pk, ps_cols, pc, num_groups, key_dtype):
+    """Sorted segmented combine of per-tile (key, sums..., count) partials
+    into the dense (keys, sums (C, G), counts, n_found) accumulator contract
+    — the same combine shape as groupby_sorted_sum, carrying counts and any
+    number of sum columns through ONE sort."""
+    sk, sc, *ss = jax.lax.sort((pk, pc) + tuple(ps_cols), num_keys=1,
+                               is_stable=True)
+    valid = sk != KEY_SENTINEL
+    bnd = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]]) & valid
+    gid = jnp.cumsum(bnd.astype(jnp.int32)) - 1
+    n_found = gid[-1] + 1
+    gid = jnp.where(valid & (gid < num_groups), gid, num_groups)
+    keys_o = jnp.full((num_groups + 1,), KEY_SENTINEL, key_dtype).at[gid].set(
+        jnp.where(valid, sk, KEY_SENTINEL), mode="drop"
+    )
+    sums_o = jnp.stack([
+        jax.ops.segment_sum(jnp.where(valid, s, 0.0), gid,
+                            num_segments=num_groups + 1)[:num_groups]
+        for s in ss
+    ]) if ss else jnp.zeros((0, num_groups), jnp.float32)
+    counts_o = jax.ops.segment_sum(jnp.where(valid, sc, 0), gid,
+                                   num_segments=num_groups + 1)
+    return (keys_o[:num_groups], sums_o, counts_o[:num_groups],
+            jnp.minimum(n_found, num_groups))
+
+
+def groupjoin_probe_agg(
+    bkeys: jax.Array,  # (P, capR) padded build key blocks
+    bvals: jax.Array | None,  # (P, Cb, capR) build value blocks, None if none
+    off_r: jax.Array,  # (P,) build partition offsets
+    probe_keys_part: jax.Array,  # partitioned probe join keys
+    gk_part: jax.Array,  # partitioned probe group keys
+    pv_part: jax.Array | None,  # (Cp, n) partitioned probe value columns
+    probe_off: jax.Array,
+    probe_sz: jax.Array,
+    num_groups: int,
+    *,
+    col_sides: tuple,  # ("probe"|"build", within-side index) per sum column
+    impl: str = "pallas",
+):
+    """Co-partition pk_fk probe fused with grouped accumulation: each probe
+    sub-block is matched against its build block ONCE and reduced to
+    per-tile (group key, sums..., count) partials in VMEM — the joined rows
+    are never written, and every aggregate column rides the same probe pass
+    — then one sorted segmented combine produces the accumulator.
+
+    Returns (group_keys[num_groups], sums[C, num_groups],
+    counts[num_groups], valid_count)."""
+    P, cap_r = bkeys.shape
+    n = probe_keys_part.shape[0]
+    count_only = not col_sides
+    if count_only:  # keys+counts still flow through one (dummy) sum column
+        col_sides = (("probe", 0),)
+    if bvals is None:
+        bvals = jnp.zeros((P, 1, cap_r), jnp.float32)
+    if pv_part is None:
+        pv_part = jnp.zeros((1, n), jnp.float32)
+    if impl == "xla":
+        # reference arm: plain probe, then per-row values + segmented combine
+        row = jnp.arange(n, dtype=jnp.int32)
+        part = jnp.clip(
+            jnp.searchsorted(probe_off, row, side="right").astype(jnp.int32) - 1,
+            0, P - 1)
+        vid, matched = ref.hash_probe_blocks(bkeys, off_r, probe_keys_part, part)
+        bp = jnp.clip(
+            jnp.searchsorted(off_r, vid, side="right").astype(jnp.int32) - 1,
+            0, P - 1)
+        slot = jnp.clip(vid - jnp.take(off_r, bp), 0, cap_r - 1)
+        cols = []
+        for side, j in col_sides:
+            if side == "build":
+                val = jnp.take(bvals[:, j, :].reshape(-1), bp * cap_r + slot)
+            else:
+                val = pv_part[j].astype(jnp.float32)
+            cols.append(jnp.where(matched, val, 0.0))
+        gke = jnp.where(matched, gk_part, KEY_SENTINEL)
+        keys_o, sums_o, counts_o, found = _combine_group_partials(
+            gke, cols, matched.astype(jnp.int32), num_groups, gk_part.dtype)
+        return keys_o, sums_o[:0] if count_only else sums_o, counts_o, found
+    cap_s = cap_r
+    max_blocks = ceil_div(n, cap_s) + P
+    pk, part, src_idx = layout_probe_blocks(
+        probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
+    safe = jnp.clip(src_idx, 0, n - 1)
+    pad = src_idx >= 0
+    gkb = jnp.where(pad, jnp.take(gk_part, safe), KEY_SENTINEL)
+    # (B, Cp, capS): every probe value column laid out with the same block map
+    pvb = jnp.where(pad[:, None, :],
+                    jnp.take(pv_part.astype(jnp.float32), safe, axis=1
+                             ).transpose(1, 0, 2), 0.0)
+    pkeys, psums, pcounts = probe_agg_pallas(
+        bkeys, bvals, pk, gkb, pvb, part,
+        col_sides=tuple(col_sides), interpret=INTERPRET)
+    C = len(col_sides)
+    keys_o, sums_o, counts_o, found = _combine_group_partials(
+        pkeys.reshape(-1),
+        [psums[:, c, :].reshape(-1) for c in range(C)],
+        pcounts.reshape(-1), num_groups, gk_part.dtype)
+    return keys_o, sums_o[:0] if count_only else sums_o, counts_o, found
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,398 @@
+"""Fused group-join correctness: phj_groupjoin against a python oracle and
+against the unfused join-then-group-by pipeline, overflow escalation
+(build-partition bits AND accumulator capacity), the Pallas probe+accumulate
+kernel, the cost model's crossover, and the engine's fusion decision on
+both sides of it.
+
+Payload values are kept small so float32 accumulator paths are exact and
+results can be compared to the NumPy reference with equality."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (JoinStats, KEY_SENTINEL, Table, group_aggregate,
+                        groupjoin_checked, groupjoin_overflowed,
+                        groupjoin_required_groups, join, phj_groupjoin,
+                        predict_groupby_time, predict_groupjoin_time,
+                        predict_join_time)
+
+
+def make_workload(rng, n_r, n_s, n_groups, match_ratio=1.0, riders=0):
+    """pk_fk build side (unique keys, payload rv) + probe side
+    (key, group key g, payload sv, plus `riders` payload columns the
+    aggregation never reads — the columns an unfused join must drag
+    through its materialization)."""
+    rk = rng.permutation(n_r).astype(np.int32)
+    if match_ratio < 1.0:
+        drop = rng.random(n_r) < (1 - match_ratio)
+        rk = np.where(drop, (np.arange(n_r) + 10 * n_r + 7).astype(np.int32), rk)
+    sk = rng.integers(0, n_r, n_s).astype(np.int32)
+    g = rng.integers(0, n_groups, n_s).astype(np.int32)
+    R = Table({"k": jnp.asarray(rk),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    s = {"k": jnp.asarray(sk), "g": jnp.asarray(g),
+         "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))}
+    for j in range(riders):
+        s[f"x{j}"] = jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))
+    return R, Table(s)
+
+
+def oracle(R, S):
+    """group -> (rv_sum, sv_sum, count, sv_min) over matched probe rows."""
+    rmap = dict(zip(np.asarray(R["k"]).tolist(), np.asarray(R["rv"]).tolist()))
+    out = {}
+    for k, g, s in zip(np.asarray(S["k"]).tolist(), np.asarray(S["g"]).tolist(),
+                       np.asarray(S["sv"]).tolist()):
+        if k in rmap:
+            e = out.setdefault(g, [0, 0, 0, None])
+            e[0] += rmap[k]
+            e[1] += s
+            e[2] += 1
+            e[3] = s if e[3] is None else min(e[3], s)
+    return out
+
+
+def result_map(T, count, cols):
+    n = int(count)
+    key = T.column_names[0] if "g" not in T.column_names else "g"
+    ks = np.asarray(T[key])[:n]
+    return {int(ks[i]): tuple(float(np.asarray(T[c])[i]) for c in cols)
+            for i in range(n)}
+
+
+# ---------------------------------------------------------------------------
+# Operator correctness vs oracle and vs the unfused pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["sort", "partition_hash", "scatter"])
+@pytest.mark.parametrize("match_ratio", [1.0, 0.5])
+def test_groupjoin_matches_oracle(strategy, match_ratio, rng):
+    R, S = make_workload(rng, 700, 4000, 48, match_ratio)
+    ref = oracle(R, S)
+    aggs = {"rv": "sum", "sv": "mean", "k": "count"}
+    T, count = phj_groupjoin(R, S, key="k", group_key="g", aggs=aggs,
+                             num_groups=64, agg_strategy=strategy)
+    assert int(count) == len(ref)
+    got = result_map(T, count, ("rv_sum", "sv_mean", "k_count"))
+    for g, (rs, ss, c, _) in ref.items():
+        grs, gms, gc = got[g]
+        assert grs == rs
+        assert gms == pytest.approx(ss / c, abs=1e-4)
+        assert gc == c
+    # padding rows carry the sentinel
+    assert bool((np.asarray(T["g"])[int(count):] == KEY_SENTINEL).all())
+
+
+def test_groupjoin_min_max_and_group_on_join_key(rng):
+    R, S = make_workload(rng, 300, 2000, 32)
+    T, count = phj_groupjoin(R, S, key="k", group_key="g",
+                             aggs={"sv": "min", "rv": "max"}, num_groups=64)
+    ref = oracle(R, S)
+    got = result_map(T, count, ("sv_min",))
+    for g, (_, _, _, mn) in ref.items():
+        assert got[g][0] == mn
+    # grouping on the join key itself: one group per matched build key
+    T2, c2 = phj_groupjoin(R, S, key="k", group_key="k",
+                           aggs={"sv": "sum"}, num_groups=512)
+    matched_keys = set(np.asarray(R["k"]).tolist()) & set(np.asarray(S["k"]).tolist())
+    assert int(c2) == len(matched_keys)
+
+
+def test_groupjoin_matches_unfused_pipeline_exactly(rng):
+    """The fused operator must agree with join-then-group-by row for row
+    (same strategy, small values so every accumulator dtype is exact)."""
+    R, S = make_workload(rng, 500, 3000, 40)
+    aggs = {"rv": "sum", "sv": "sum"}
+    for strategy in ("sort", "partition_hash", "scatter"):
+        J, _ = join(R, S, key="k", algorithm="phj", pattern="gftr",
+                    out_size=S.num_rows, mode="pk_fk")
+        G1, c1 = group_aggregate(J.select(("g", "rv", "sv")), key="g",
+                                 aggs=aggs, num_groups=64, strategy=strategy)
+        G2, c2 = phj_groupjoin(R, S, key="k", group_key="g", aggs=aggs,
+                               num_groups=64, agg_strategy=strategy)
+        assert int(c1) == int(c2)
+        m1 = result_map(G1, c1, ("rv_sum", "sv_sum"))
+        m2 = result_map(G2, c2, ("rv_sum", "sv_sum"))
+        assert m1 == m2, strategy
+
+
+def test_groupjoin_under_jit(rng):
+    R, S = make_workload(rng, 400, 2500, 30)
+    import functools
+
+    f = jax.jit(functools.partial(phj_groupjoin, key="k", group_key="g",
+                                  aggs={"sv": "sum"}, num_groups=64))
+    T, count = f(R, S)
+    ref = oracle(R, S)
+    assert int(count) == len(ref)
+    got = result_map(T, count, ("sv_sum",))
+    assert {g: v[0] for g, v in got.items()} == {g: float(e[1]) for g, e in ref.items()}
+
+
+# ---------------------------------------------------------------------------
+# Pallas probe+accumulate kernel
+# ---------------------------------------------------------------------------
+def test_groupjoin_pallas_matches_xla(rng):
+    R, S = make_workload(rng, 600, 3500, 40, match_ratio=0.8)
+    aggs = {"rv": "sum", "sv": "mean", "k": "count"}
+    T1, c1 = phj_groupjoin(R, S, key="k", group_key="g", aggs=aggs,
+                           num_groups=64, probe_impl="xla")
+    T2, c2 = phj_groupjoin(R, S, key="k", group_key="g", aggs=aggs,
+                           num_groups=64, probe_impl="pallas")
+    assert int(c1) == int(c2)
+    cols = ("rv_sum", "sv_mean", "k_count")
+    m1, m2 = result_map(T1, c1, cols), result_map(T2, c2, cols)
+    assert set(m1) == set(m2)
+    for g in m1:
+        assert m1[g][0] == m2[g][0]
+        assert m1[g][1] == pytest.approx(m2[g][1], abs=1e-4)
+        assert m1[g][2] == m2[g][2]
+
+
+def test_groupjoin_probe_agg_ops_parity(rng):
+    """ops-level dispatch: the Pallas kernel arm and the XLA reference arm
+    of groupjoin_probe_agg agree on keys, sums, and counts — with probe- and
+    build-side value columns riding the same single probe pass."""
+    from repro.core.groupjoin import _value_blocks
+    from repro.core.hash_join import _digits, build_blocks
+    from repro.core import primitives as prim
+    from repro.kernels import ops as kops
+
+    n_r, n_s, p_bits = 500, 2000, 4
+    rk = jnp.asarray(rng.permutation(n_r).astype(np.int32))
+    rv = jnp.asarray(rng.integers(0, 50, n_r).astype(np.int32))
+    sk = jnp.asarray(rng.integers(0, n_r, n_s).astype(np.int32))
+    gk = jnp.asarray(rng.integers(0, 20, n_s).astype(np.int32))
+    sv = jnp.asarray(rng.integers(0, 50, n_s).astype(np.int32))
+    P = 1 << p_bits
+    perm_r, off_r, sz_r = prim.plan_partition_permutation(_digits(rk, p_bits, True), P)
+    perm_s, off_s, sz_s = prim.plan_partition_permutation(_digits(sk, p_bits, True), P)
+    bkeys, _, _ = build_blocks(prim.apply_permutation(perm_r, rk), off_r, sz_r, 256)
+    bvals = _value_blocks(prim.apply_permutation(perm_r, rv), off_r, sz_r, 256)
+    ks = prim.apply_permutation(perm_s, sk)
+    gks = prim.apply_permutation(perm_s, gk)
+    svs = prim.apply_permutation(perm_s, sv).astype(jnp.float32)
+    for col_sides, bv, pv in (
+        ((("probe", 0), ("build", 0)), bvals[:, None, :], svs[None, :]),
+        ((("build", 0),), bvals[:, None, :], None),
+        ((), None, None),  # count-only: empty sums, keys+counts intact
+    ):
+        outs = [kops.groupjoin_probe_agg(
+            bkeys, bv, off_r, ks, gks, pv, off_s, sz_s, 32,
+            col_sides=col_sides, impl=impl)
+            for impl in ("pallas", "xla")]
+        assert outs[0][1].shape == (len(col_sides), 32)
+        for a, b in zip(outs[0], outs[1]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Overflow escalation: bits, then accumulator capacity
+# ---------------------------------------------------------------------------
+def test_groupjoin_checked_escalates_partition_bits(rng):
+    """Distinct build keys that co-partition under the default fan-out
+    (hash_keys=False, keys congruent mod P): the unchecked run overflows the
+    padded build block and loses matches; the checked driver adds bits and
+    stays exact."""
+    n_r, n_s = 600, 3000
+    rk = (np.arange(n_r, dtype=np.int32) * 16)  # all ≡ 0 mod 16 (= default P)
+    sk = rk[rng.integers(0, n_r, n_s)].astype(np.int32)
+    R = Table({"k": jnp.asarray(rk),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(sk),
+               "g": jnp.asarray(rng.integers(0, 16, n_s).astype(np.int32)),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    b_ovf, _, g_ovf, _ = groupjoin_overflowed(
+        R, S, key="k", group_key="g", num_groups=64, hash_keys=False)
+    assert b_ovf and not g_ovf
+    ref = oracle(R, S)
+    T, count = groupjoin_checked(R, S, key="k", group_key="g",
+                                 aggs={"rv": "sum", "sv": "sum"},
+                                 num_groups=64, hash_keys=False)
+    assert int(count) == len(ref)
+    got = result_map(T, count, ("rv_sum", "sv_sum"))
+    assert got == {g: (float(e[0]), float(e[1])) for g, e in ref.items()}
+
+
+def test_groupjoin_checked_grows_accumulator(rng):
+    """More groups than the requested capacity: the unchecked run truncates
+    (count == num_groups), the checked driver grows the accumulator to the
+    exact distinct-group bound and keeps every group."""
+    R, S = make_workload(rng, 400, 3000, 150)
+    ref = oracle(R, S)
+    assert len(ref) == 150  # every group hit at this size
+    _, _, g_ovf, required = groupjoin_overflowed(
+        R, S, key="k", group_key="g", num_groups=16)
+    assert g_ovf and required == 150
+    assert groupjoin_required_groups(S, key="k", group_key="g") == 150
+    _, trunc = phj_groupjoin(R, S, key="k", group_key="g",
+                             aggs={"sv": "sum"}, num_groups=16)
+    assert int(trunc) == 16
+    T, count = groupjoin_checked(R, S, key="k", group_key="g",
+                                 aggs={"sv": "sum"}, num_groups=16)
+    assert int(count) == 150
+    got = result_map(T, count, ("sv_sum",))
+    assert {g: v[0] for g, v in got.items()} == {g: float(e[1]) for g, e in ref.items()}
+
+
+def test_groupjoin_checked_scatter_covers_sparse_domain(rng):
+    """scatter indexes the accumulator by key VALUE: with a sparse group
+    domain the distinct-count bound is not enough — the checked driver must
+    grow the accumulator to the key domain or silently drop groups."""
+    n_r, n_s = 200, 1000
+    rk = rng.permutation(n_r).astype(np.int32)
+    sk = rng.integers(0, n_r, n_s).astype(np.int32)
+    g = (rng.integers(0, 3, n_s).astype(np.int32) * 50000)  # {0, 50k, 100k}
+    R = Table({"k": jnp.asarray(rk),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(sk), "g": jnp.asarray(g),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    assert groupjoin_required_groups(S, key="k", group_key="g",
+                                     agg_strategy="scatter") == 100001
+    T, count = groupjoin_checked(R, S, key="k", group_key="g",
+                                 aggs={"sv": "sum"}, num_groups=64,
+                                 agg_strategy="scatter")
+    ref = oracle(R, S)
+    assert int(count) == len(ref) == 3
+    got = result_map(T, count, ("sv_sum",))
+    assert {g_: v[0] for g_, v in got.items()} == \
+        {g_: float(e[1]) for g_, e in ref.items()}
+
+
+def test_groupjoin_rejects_build_side_group_key(rng):
+    R, S = make_workload(rng, 100, 500, 8)
+    with pytest.raises(ValueError, match="probe-side"):
+        phj_groupjoin(R, S, key="k", group_key="rv", aggs={"sv": "sum"},
+                      num_groups=16)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+def test_predict_groupjoin_time_has_no_materialize_term():
+    st = JoinStats(n_r=1 << 16, n_s=1 << 20, r_payload_cols=1,
+                   s_payload_cols=2, match_ratio=1.0)
+    t = predict_groupjoin_time(st, 2)
+    assert set(t) == {"transform", "find", "accumulate", "total"}
+    assert t["total"] == pytest.approx(
+        t["transform"] + t["find"] + t["accumulate"])
+    assert t["total"] > 0
+
+
+def test_predict_groupjoin_crossover_with_match_ratio():
+    """The fusion's structural trade: fused aggregates the whole probe side,
+    unfused only the (match_ratio-sized) join output. High match ratio must
+    favor fusion, very low must favor the unfused pair — the decision
+    boundary the engine's fusion pass prices."""
+    def totals(mr):
+        st = JoinStats(n_r=1 << 14, n_s=1 << 20, r_payload_cols=1,
+                       s_payload_cols=4, match_ratio=mr)
+        fused = predict_groupjoin_time(st, 1, "sort")["total"]
+        n_out = int(st.n_s * mr)
+        unfused = (predict_join_time(st, "phj", "gftr")["total"]
+                   + predict_groupby_time(max(n_out, 1), 1, "sort"))
+        return fused, unfused
+
+    f_hi, u_hi = totals(1.0)
+    f_lo, u_lo = totals(0.05)
+    assert f_hi < u_hi
+    assert f_lo > u_lo
+
+
+# ---------------------------------------------------------------------------
+# Engine: fusion decision on both sides of the crossover
+# ---------------------------------------------------------------------------
+OPT = dict(measure_profile=False)
+
+
+def _engine_ref(R, S):
+    rmap = dict(zip(np.asarray(R["k"]).tolist(), np.asarray(R["rv"]).tolist()))
+    ref = {}
+    for k, g in zip(np.asarray(S["k"]).tolist(), np.asarray(S["g"]).tolist()):
+        if k in rmap:
+            ref[g] = ref.get(g, 0) + rmap[k]
+    return ref
+
+
+def test_engine_fuses_on_high_match_ratio(rng):
+    from repro.engine import Catalog, optimize, scan
+
+    R, S = make_workload(rng, 2000, 20000, 50, riders=2)
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").join(scan("R"), key="k").group_by("g", rv="sum", sv="mean")
+    plan = optimize(q, cat, **OPT)
+    text = plan.explain()
+    assert "GroupJoin[" in text and "cost=" in text, text
+    T, count = plan.run()
+    ref = _engine_ref(R, S)
+    assert int(count) == len(ref)
+    got = result_map(T, count, ("rv_sum",))
+    assert {g: v[0] for g, v in got.items()} == {g: float(v) for g, v in ref.items()}
+
+
+def test_engine_rejects_fusion_on_low_match_ratio(rng):
+    """Mostly-unmatched probe keys: grouping the tiny join output is
+    cheaper than running the accumulator over the whole probe side; the
+    cost model must keep the unfused plan, and explain() must show the
+    rejected fusion's pricing."""
+    from repro.engine import Catalog, optimize, scan
+
+    n_r, n_s = 2000, 20000
+    R = Table({"k": jnp.asarray(rng.permutation(n_r).astype(np.int32)),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(rng.integers(0, 40 * n_r, n_s).astype(np.int32)),
+               "g": jnp.asarray(rng.integers(0, 50, n_s).astype(np.int32)),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").join(scan("R"), key="k").group_by("g", rv="sum", sv="mean")
+    plan = optimize(q, cat, **OPT)
+    text = plan.explain()
+    assert "GroupJoin[" not in text and "fusion rejected" in text, text
+    T, count = plan.run()
+    ref = _engine_ref(R, S)
+    assert int(count) == len(ref)
+    got = result_map(T, count, ("rv_sum",))
+    assert {g: v[0] for g, v in got.items()} == {g: float(v) for g, v in ref.items()}
+
+
+def test_engine_fusion_on_build_key_alias(rng):
+    """Grouping on the build-side key name (the equal-valued alias of the
+    probe key): the fusion must map it to the probe key and name the output
+    column after the logical GroupBy key."""
+    from repro.engine import Catalog, optimize, scan
+
+    n_r, n_s = 1000, 15000
+    R = Table({"kr": jnp.asarray(rng.permutation(n_r).astype(np.int32)),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(rng.integers(0, n_r, n_s).astype(np.int32)),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32)),
+               "x0": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32)),
+               "x1": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    cat = Catalog({"R": R, "S": S})
+    q = (scan("S").join(scan("R"), left_key="k", right_key="kr")
+         .group_by("kr", sv="sum"))
+    plan = optimize(q, cat, **OPT)
+    assert "GroupJoin[" in plan.explain(), plan.explain()
+    T, count = plan.run()
+    assert "kr" in T.column_names
+    ref = {}
+    for k, s in zip(np.asarray(S["k"]).tolist(), np.asarray(S["sv"]).tolist()):
+        ref[k] = ref.get(k, 0) + s
+    n = int(count)
+    assert n == len(ref)
+    ks = np.asarray(T["kr"])[:n]
+    vs = np.asarray(T["sv_sum"])[:n]
+    assert {int(k): float(v) for k, v in zip(ks, vs)} == \
+        {k: float(v) for k, v in ref.items()}
+
+
+def test_engine_force_join_disables_fusion(rng):
+    from repro.engine import Catalog, optimize, scan
+
+    R, S = make_workload(rng, 1000, 10000, 30)
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").join(scan("R"), key="k").group_by("g", rv="sum")
+    plan = optimize(q, cat, force_join=("phj", "gftr"), **OPT)
+    assert "GroupJoin[" not in plan.explain()
