@@ -16,11 +16,21 @@ echo "ci: smoke-scale engine benchmark OK"
 
 # Smoke-scale partition-based group-by sweep: exercises the high-cardinality
 # strategy end to end and leaves BENCH_groupby.json (name -> us_per_call)
-# as the perf trajectory future PRs regress against.
+# as the perf trajectory future PRs regress against. The sweep must also
+# record the partition-vs-sort speedup ratios (measured and modeled) so the
+# trajectory captures the sort-free planner's win, not just raw times.
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run groupby/partition > /dev/null
 test -s BENCH_groupby.json
-echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json)"
+python - <<'PY'
+import json
+rows = json.load(open("BENCH_groupby.json"))
+for kind in ("speedup_vs_sort_measured", "speedup_vs_sort_modeled"):
+    keys = [k for k in rows if k.endswith(kind)]
+    assert keys, f"BENCH_groupby.json is missing {kind} trajectory keys"
+    assert all(rows[k] > 0 for k in keys), (kind, keys)
+PY
+echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json + speedup keys)"
 
 # Smoke-scale fused group-join benchmark: exercises the probe+accumulate
 # path (fused vs join-then-group-by) end to end and leaves

@@ -241,26 +241,31 @@ def groupby_partition_hash(
 # ---------------------------------------------------------------------------
 # default padded-block capacity per partition (the BUILD_BLOCK analogue);
 # a single key's rows co-hash no matter the fan-out, so per-key multiplicity
-# beyond this cannot be partitioned away — the engine guard checks against it
-PARTITION_ROW_BLOCK = 256
+# beyond this cannot be partitioned away — the engine guard checks against it.
+# The layout targets E[partition rows] <= row_block/2 (hashed keys at the
+# low multiplicities the chooser routes here put the 2x-mean tail far below
+# fp precision), so the padded slot space stays ~2-4x n instead of the 6x a
+# quarter-full 256-row block cost — the slot space is what every blocked
+# aggregation pass streams over.
+PARTITION_ROW_BLOCK = 128
 
 
 def choose_groupby_partition_bits(n_rows: int,
                                   row_block: int = PARTITION_ROW_BLOCK) -> int:
-    """Fan-out so that E[partition rows] <= row_block/4: with hashed keys and
+    """Fan-out so that E[partition rows] <= row_block/2: with hashed keys and
     per-key multiplicity << row_block (the high-cardinality regime this
     algorithm targets), overflow of the padded block becomes negligible.
 
     Capped at 16 bits (65536 partitions); past the cap the BLOCK must grow
     instead — `_partition_layout` below holds the invariant either way."""
-    target = max(1, (4 * n_rows) // row_block)
+    target = max(1, (2 * n_rows) // row_block)
     return max(1, min(16, (target - 1).bit_length()))
 
 
 def _partition_layout(n_rows: int, row_block: int,
                       partition_bits: int | None) -> tuple[int, int]:
     """(p_bits, row_block) honoring the VMEM-fit invariant
-    E[rows/partition] <= row_block/4. When the requested block would need
+    E[rows/partition] <= row_block/2. When the requested block would need
     more than the 16-bit fan-out cap, the block grows to cover the expected
     partition size — never silently over-fill partitions (that would drop
     every partition's overhang, not a tail). Explicit partition_bits skips
@@ -269,7 +274,7 @@ def _partition_layout(n_rows: int, row_block: int,
     if partition_bits is not None:
         return partition_bits, row_block
     p_bits = choose_groupby_partition_bits(n_rows, row_block)
-    need = -(-4 * n_rows // (1 << p_bits))  # block for E[size] == block/4
+    need = -(-2 * n_rows // (1 << p_bits))  # block for E[size] == block/2
     if need > row_block:
         row_block = 1 << int(need - 1).bit_length()
     return p_bits, row_block
@@ -320,13 +325,21 @@ def groupby_partition(
     (partition, key), not globally key-sorted.
 
     One-permutation materialization: the partition is planned once
-    (`plan_partition_permutation`, carrying only digit+iota) and each column
-    — key and payloads — is gathered exactly once, straight into the blocked
-    (P, row_block) layout.
+    (`plan_partition_permutation`, sort-free by default — DESIGN.md §10) and
+    each column — key and payloads — is gathered exactly once, straight into
+    the blocked (P, row_block) layout.
+
+    The per-partition aggregation is scatter-free: one stable block-local
+    sort carries the key and every aggregate input together (VMEM-resident
+    work — the shared-memory hash-table analogue), group sums fall out of
+    masked cumulative sums differenced at run boundaries, and the dense
+    output is compacted by a binary search over the monotone run ids — no
+    segment scatter, no slot-space scatter, no compaction scatter (min/max
+    aggregates alone still need one segmented reduction each).
 
     Static-shape caveat: a partition holding more than `row_block` rows has
     its overhang dropped. `choose_groupby_partition_bits` sizes the fan-out
-    for E[rows/partition] <= row_block/4, which makes overflow negligible for
+    for E[rows/partition] <= row_block/2, which makes overflow negligible for
     the high-cardinality, low-multiplicity inputs the strategy chooser routes
     here; heavy per-key duplication co-hashes regardless of fan-out, so
     skewed/duplicated inputs belong to `partition_hash` instead. Use
@@ -337,9 +350,8 @@ def groupby_partition(
     P = 1 << p_bits
     digits = _partition_digits(keys, p_bits)
     # One-permutation plan over P+1 partitions (the extra one swallows
-    # sentinel padding and is never materialized). The key column rides the
-    # plan passes (Algorithm 1's key-rides-along idiom), so it comes back
-    # partitioned without a separate unclustered gather.
+    # sentinel padding and is never materialized). The key column comes back
+    # already partitioned (Algorithm 1's key-rides-along idiom).
     perm, (keys_part,), offsets, sizes = prim.plan_partition_permutation(
         digits, P + 1, carry=(keys,))
 
@@ -355,43 +367,82 @@ def groupby_partition(
     kblocks = jnp.where(in_part, jnp.take(keys_part, pos_c),
                         jnp.asarray(KEY_SENTINEL, keys.dtype))
 
-    # Per-partition aggregation: block-local sort + dense local group ids
-    # (the shared-memory hash-table analogue), then one segmented reduction
-    # into per-partition accumulator slots. Slot (p, g) is partition p's g-th
-    # group; no slot is shared across partitions, so these are FINAL values.
-    ks, order, valid, bnd, lgid = _block_local_groups(kblocks)
+    # Per-partition grouping: ONE stable block-local sort moves the key and
+    # every aggregate input together (a group lives in exactly one
+    # partition, so block runs are final groups). Sentinel slots sort to the
+    # front of their block and are masked out of every reduction.
+    val_names = [c for c, op in aggs.items() if op != "count"]
+    uniq_cols = list(dict.fromkeys(val_names))
+    vblocks = [jnp.take(table[c], src) for c in uniq_cols]  # col's ONE gather
+    sorted_ = jax.lax.sort((kblocks,) + tuple(vblocks), num_keys=1,
+                           is_stable=True)
+    ks = sorted_[0]
+    vsorted = dict(zip(uniq_cols, sorted_[1:]))
     n_slots = P * row_block
-    gid = jnp.where(valid, jnp.arange(P, dtype=jnp.int32)[:, None] * row_block + lgid,
-                    n_slots)  # invalid -> dump slot
-    gid_f = gid.reshape(-1)
-    counts = jax.ops.segment_sum(valid.astype(jnp.int32).reshape(-1), gid_f,
-                                 num_segments=n_slots + 1)
-    slot_keys = (
-        jnp.full((n_slots + 1,), KEY_SENTINEL, keys.dtype)
-        .at[jnp.where(bnd, gid, n_slots).reshape(-1)]
-        .set(ks.reshape(-1))
-    )
+    ksf = ks.reshape(-1)
+    valid = (ksf != jnp.asarray(KEY_SENTINEL, keys.dtype))
+    head = jnp.concatenate(
+        [jnp.ones((P, 1), bool), ks[:, 1:] != ks[:, :-1]], axis=1).reshape(-1)
+    bnd = head & valid
+    rid = jnp.cumsum(bnd.astype(jnp.int32)) - 1  # monotone run id per slot
+    n_found = rid[-1] + 1 if n_slots else jnp.zeros((), jnp.int32)
+    count = jnp.minimum(n_found, num_groups)
 
-    agg_cols = {}
+    # Dense compaction without a scatter: rid is sorted, so the r-th run's
+    # first slot is a binary search; run r spans [starts[r], starts[r+1]).
+    r_iota = jnp.arange(num_groups + 1, dtype=jnp.int32)
+    starts = jnp.searchsorted(rid, r_iota, side="left").astype(jnp.int32)
+    starts_c = jnp.clip(starts[:num_groups], 0, max(n_slots - 1, 0))
+    present = jnp.arange(num_groups, dtype=jnp.int32) < count
+    out_keys = jnp.where(present, jnp.take(ksf, starts_c),
+                         jnp.asarray(KEY_SENTINEL, keys.dtype))
+
+    def run_total(per_slot):
+        """Count over each run via an exclusive cumsum differenced at run
+        boundaries — int32 is exact however long the prefix, never a
+        scatter."""
+        ecs = jnp.concatenate([jnp.zeros((1,), per_slot.dtype),
+                               jnp.cumsum(per_slot)])
+        return jnp.take(ecs, starts[1:]) - jnp.take(ecs, starts[:num_groups])
+
+    # Float run sums use BLOCK-LOCAL exclusive cumsums instead: a run never
+    # spans blocks (valid rows are a block's sorted suffix), so the prefix a
+    # difference cancels is bounded by one block's magnitude — the rounding
+    # error of a global n-slot prefix would grow with the whole relation.
+    s_flat = starts[:num_groups]
+    e_flat = starts[1:]
+    row_s = jnp.minimum(s_flat // row_block, P - 1)
+    col_s = s_flat - (s_flat // row_block) * row_block
+    col_e = jnp.where(e_flat // row_block == s_flat // row_block,
+                      e_flat - (e_flat // row_block) * row_block, row_block)
+
+    def run_block_total(masked2d):
+        ecs = jnp.concatenate(
+            [jnp.zeros((P, 1), masked2d.dtype), jnp.cumsum(masked2d, axis=1)],
+            axis=1).reshape(-1)  # (P * (row_block+1),)
+        hi = jnp.take(ecs, row_s * (row_block + 1) + col_e)
+        lo = jnp.take(ecs, row_s * (row_block + 1) + col_s)
+        return jnp.where(present, hi - lo, jnp.zeros((), masked2d.dtype))
+
+    valid2d = valid.reshape(P, row_block)
+    counts = run_total(valid.astype(jnp.int32))
+    cols = {key: out_keys}
     for col, op in aggs.items():
         if op == "count":
-            agg_cols[f"{col}_{op}"] = counts
+            cols[f"{col}_{op}"] = counts
             continue
-        vblocks = jnp.take(table[col], src)  # the column's ONE gather
-        vs = jnp.take_along_axis(vblocks, order, axis=1).reshape(-1)
-        acc = _seg_reduce(op, vs, gid_f, n_slots + 1)
-        agg_cols[f"{col}_{op}"] = _finalize(op, acc, counts)
-
-    # Concatenate dense per-partition outputs: stable compaction of the live
-    # slots preserves (partition, key) order.
-    present = slot_keys[:n_slots] != jnp.asarray(KEY_SENTINEL, keys.dtype)
-    names = [key] + list(agg_cols)
-    arrays = [slot_keys[:n_slots]] + [a[:n_slots] for a in agg_cols.values()]
-    compacted, count = prim.compact(present, arrays, num_groups)
-    out = dict(zip(names, compacted))
-    out[key] = jnp.where(jnp.arange(num_groups) < count, out[key],
-                         jnp.asarray(KEY_SENTINEL, keys.dtype))
-    return Table(out), count
+        vs = vsorted[col].reshape(-1)
+        if op in ("sum", "mean"):
+            acc = run_block_total(
+                jnp.where(valid2d, vsorted[col], jnp.zeros((), vs.dtype)))
+        else:  # min/max: not expressible as a cumsum difference
+            seg = jnp.where(valid & (rid < num_groups), rid, num_groups)
+            fill = (jnp.finfo if jnp.issubdtype(vs.dtype, jnp.floating)
+                    else jnp.iinfo)(vs.dtype)
+            masked = jnp.where(valid, vs, fill.max if op == "min" else fill.min)
+            acc = _seg_reduce(op, masked, seg, num_groups + 1)[:num_groups]
+        cols[f"{col}_{op}"] = _finalize(op, acc, counts)
+    return Table(cols), count
 
 
 def groupby_partition_overflowed(

@@ -82,6 +82,12 @@ class PrimitiveProfile:
     # when fed v5e constants; re-profile per part (paper §5.4).
     seq_bw: float = 819e9  # sequential HBM stream (v5e)
     sort_pass_bw: float = 819e9  # rd+wr bytes already counted x2 per pass
+    # A partition pass is NOT a sort pass: it is histogram + prefix + stable
+    # rank + move (kernels.ops.partition_plan) — streaming dense work with
+    # no compare-exchange network. Profiled separately so the planner prices
+    # the pipeline that actually runs; the v5e default assumes pass parity
+    # with the tuned sort (conservative — measure() replaces it).
+    partition_pass_bw: float = 819e9
     unclustered_penalty: float = 20.0  # effective slowdown per random-gathered byte
     clustered_penalty: float = 1.3
 
@@ -129,6 +135,15 @@ class PrimitiveProfile:
         passes = prim.num_radix_passes(8 * key_bytes)
         t_sort = timed(lambda k, v: prim.sort_pairs(k, v), keys, vals)
         sort_pass_bw = passes * n * (key_bytes + 4) * 2 / t_sort
+        # RADIX-PARTITION: time the production (kernel-backed, sort-free)
+        # plan at an 8-bit fan-out and back the per-pass bandwidth out of
+        # the same (digit + perm) x rd/wr byte convention partition_cost
+        # charges — the split sort/partition calibration the planner needs
+        # to price the crossover honestly (paper §5.4).
+        digits = jnp.asarray(rng.integers(0, 256, n).astype(np.int32))
+        t_part = timed(
+            lambda d: prim.plan_partition_permutation(d, 256)[0], digits)
+        partition_pass_bw = prim.num_radix_passes(8) * n * 8 * 2 / t_part
         # GATHER: effective slowdown per gathered byte vs the sequential BW.
         gather_bytes = n * 4
         t_clu = timed(lambda v, i: jnp.take(v, i, axis=0), vals, idx_seq)
@@ -136,6 +151,7 @@ class PrimitiveProfile:
         clustered = max(t_clu * seq_bw / gather_bytes, 1.0)
         unclustered = max(t_unc * seq_bw / gather_bytes, clustered)
         return cls(seq_bw=seq_bw, sort_pass_bw=sort_pass_bw,
+                   partition_pass_bw=partition_pass_bw,
                    unclustered_penalty=unclustered, clustered_penalty=clustered)
 
     def sort_cost(self, n, key_b, val_b):
@@ -143,8 +159,12 @@ class PrimitiveProfile:
         return passes * n * (key_b + val_b) * 2 / self.sort_pass_bw
 
     def partition_cost(self, n, key_b, val_b, total_bits):
+        """A partition pass is histogram + rank + move at partition-pass
+        bandwidth — pass count scales with the FAN-OUT bits, never the key
+        width, and the rate is profiled separately from the sort network
+        (the split the kernel-backed planner makes real)."""
         passes = prim.num_radix_passes(total_bits)
-        return passes * n * (key_b + val_b) * 2 / self.sort_pass_bw
+        return passes * n * (key_b + val_b) * 2 / self.partition_pass_bw
 
     def gather_cost(self, n, val_b, clustered):
         pen = self.clustered_penalty if clustered else self.unclustered_penalty
@@ -188,27 +208,35 @@ def predict_join_time(stats: JoinStats, algorithm: str, pattern: str,
 def predict_groupby_time(n_rows: int, n_aggs: int, strategy: str,
                          profile: PrimitiveProfile | None = None, *,
                          key_bytes: int = 4, val_bytes: int = 4,
-                         row_block: int = 256) -> float:
+                         row_block: int | None = None) -> float:
     """Analytic grouped-aggregation time (seconds) per strategy, matching
     the executable paths in core.groupby:
 
       sort            one (key, iota) sort — radix passes scale with the
-                      KEY WIDTH — + per column: one permutation gather + a
-                      streaming segmented reduce
-      partition       radix passes over (digit, key, iota) — pass count
-                      scales with log2(partitions), independent of key
-                      width — + one gather per payload column into the
-                      blocked layout + a streaming block-local reduce per
-                      column (the VMEM-resident accumulator emits distinct
-                      groups, not slots, so its HBM traffic is ~n)
+                      KEY WIDTH, at the sort network's profiled rate — +
+                      per column: one permutation gather + a streaming
+                      segmented reduce
+      partition       sort-free rank passes over (digit, key, iota) — pass
+                      count scales with log2(partitions), independent of
+                      key width, at the separately profiled partition-pass
+                      rate (histogram + rank + move,
+                      kernels.ops.partition_plan; the carried key moves at
+                      pass rate, the RADIX-PARTITION(kin, vin) contract) —
+                      + one gather per payload column into the blocked
+                      layout + a streaming block-local reduce per column
+                      (the VMEM-resident accumulator emits distinct groups,
+                      not slots, so its HBM traffic is ~n)
       partition_hash  streaming tile-partial pass + sorted combine over the
                       collapsed partials (~n/4)
       scatter         per column: one unclustered accumulator scatter
 
     The sort/partition asymmetry is the paper's crossover: at high group
-    cardinality partition replaces key-width-many passes with
-    ceil((p_bits+1)/8) of them carrying the key along — decisive for 8-byte
-    keys and already ahead at 4 bytes once the fan-out needs <= 2 passes.
+    cardinality partition replaces key-width-many sort passes with
+    ceil((p_bits+1)/8) histogram/rank passes that move only (digit, perm)
+    bytes — decisive for 8-byte keys and already ahead at 4 bytes once the
+    fan-out needs <= 2 passes. The partition and sort terms are split onto
+    separate profiled bandwidths so calibration prices the pipeline that
+    actually runs.
     """
     p = profile or PrimitiveProfile()
     kb, vb = key_bytes, val_bytes
@@ -218,9 +246,10 @@ def predict_groupby_time(n_rows: int, n_aggs: int, strategy: str,
         t += (1 + n_aggs) * 2 * n_rows * vb / p.seq_bw
         return t
     if strategy == "partition":
-        from .groupby import choose_groupby_partition_bits
+        from .groupby import PARTITION_ROW_BLOCK, choose_groupby_partition_bits
 
-        bits = choose_groupby_partition_bits(n_rows, row_block) + 1
+        rb = PARTITION_ROW_BLOCK if row_block is None else row_block
+        bits = choose_groupby_partition_bits(n_rows, rb) + 1
         t = p.partition_cost(n_rows, 4, kb + 4, bits)  # (digit, key, iota)
         t += n_aggs * p.gather_cost(n_rows, vb, clustered=False)
         t += (1 + n_aggs) * 2 * n_rows * vb / p.seq_bw  # block-local reduce
@@ -238,7 +267,8 @@ def predict_groupjoin_time(stats: JoinStats, n_aggs: int,
                            profile: PrimitiveProfile | None = None,
                            partition_bits: int = 16,
                            group_key_carried: bool = False,
-                           build_aggs: int = 0) -> dict[str, float]:
+                           build_aggs: int = 0,
+                           agg_row_block: int | None = None) -> dict[str, float]:
     """Analytic per-phase time of the fused group-join (core.groupjoin):
     probe cost + scatter-accumulate cost, ZERO materialization/gather terms
     — the fusion's whole point is that the joined row is never written to
@@ -280,6 +310,7 @@ def predict_groupjoin_time(stats: JoinStats, n_aggs: int,
         p.gather_cost(stats.n_r, vb, clustered=False)
         + p.gather_cost(stats.n_s, vb, clustered=True))
     t["accumulate"] += predict_groupby_time(stats.n_s, n_aggs, agg_strategy,
-                                            p, key_bytes=kb, val_bytes=vb)
+                                            p, key_bytes=kb, val_bytes=vb,
+                                            row_block=agg_row_block)
     t["total"] = sum(t.values())
     return t

@@ -6,12 +6,15 @@ The paper builds its joins from three vendor primitives:
   RADIX-PARTITION(kin, vin, i, j)-> stable partition on radix bits [i, j)
   GATHER(in, map, out)           -> out[i] = in[map[i]]
 
-TPU adaptation (DESIGN.md §2): the *stability/determinism* requirement that
-the paper had to engineer around CUDA atomics comes for free here — the
-partition permutation is derived from a stable sort / prefix-sum ranks, never
-from write races. `sort_pairs` uses XLA's tuned TPU sort in the production
-path; `radix_sort_pairs` reproduces the paper's LSD pass structure exactly
-(one stable partition per 8-bit digit) and is what the cost model counts.
+TPU adaptation (DESIGN.md §2, §10): the *stability/determinism* requirement
+that the paper had to engineer around CUDA atomics comes for free here — the
+partition permutation is derived from prefix-sum ranks (production) or a
+stable sort (reference arm), never from write races. `sort_pairs` uses XLA's
+tuned TPU sort in the production path; partition plans default to the
+kernel-backed histogram/prefix/rank pipeline (`kernels.ops.partition_plan`),
+which is linear per pass and emits zero sort primitives;
+`radix_sort_pairs` reproduces the paper's LSD pass structure exactly (one
+stable partition per 8-bit digit) and is what the cost model counts.
 
 All primitives are shape-polymorphic pure functions safe under jit/vmap.
 """
@@ -24,6 +27,12 @@ import jax
 import jax.numpy as jnp
 
 RADIX_BITS_PER_PASS = 8  # paper §2.3: Ampere RADIX-PARTITION does max 8 bits
+
+# Production arm for full key-sort plans. XLA's tuned sort is the deliberate
+# default (the paper's vendor SORT-PAIRS choice); 'radix' runs the same
+# kernel-backed rank passes the partition planner uses, making SMJ's GFTR
+# transform sort-free as well.
+DEFAULT_SORT_PLAN_IMPL = "xla"
 
 
 # ---------------------------------------------------------------------------
@@ -65,20 +74,29 @@ def apply_permutation(perm: jax.Array, *cols: jax.Array):
     return outs if len(cols) != 1 else outs[0]
 
 
-def plan_sort_permutation(keys: jax.Array):
+def plan_sort_permutation(keys: jax.Array, *, impl: str | None = None):
     """Plan a stable key sort once, payloads later.
 
     Returns (sorted_keys, perm) where perm is the composed gather map:
     `apply_permutation(perm, col)` equals `sort_pairs(keys, col)[1]` for any
-    payload column, without re-sorting."""
-    iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
-    sk, perm = jax.lax.sort((keys, iota), num_keys=1, is_stable=True)
-    return sk, perm
+    payload column, without re-sorting.
+
+    impl='xla' (default): XLA's tuned native sort — the deliberate
+    production arm for full key sorts, mirroring the paper's use of the
+    vendor SORT-PAIRS (§2.3). impl='radix': the kernel-backed sort-free
+    rank passes over the full key pattern (int32 keys), equal to the XLA
+    sort bit-for-bit; flip `DEFAULT_SORT_PLAN_IMPL` (or pass impl=) to run
+    SMJ's GFTR transform entirely sort-free on radix hardware."""
+    from repro.kernels import ops as kops
+
+    impl = DEFAULT_SORT_PLAN_IMPL if impl is None else impl
+    return kops.sort_plan(keys, impl)
 
 
 def plan_partition_permutation(digits: jax.Array, num_partitions: int, *,
                                max_pass_bits: int | None = None,
-                               carry: Sequence[jax.Array] = ()):
+                               carry: Sequence[jax.Array] = (),
+                               impl: str | None = None):
     """Plan a stable radix partition once, payloads later.
 
     Returns (perm, offsets, sizes) — or (perm, carried, offsets, sizes) when
@@ -87,44 +105,31 @@ def plan_partition_permutation(digits: jax.Array, num_partitions: int, *,
       offsets[p] = first output position of partition p
       sizes[p]   = rows in partition p
 
-    `max_pass_bits=None` (production) computes the permutation with one XLA
-    stable sort over the digits; an integer runs the paper's multi-pass
-    structure — stable passes of <= max_pass_bits bits, LSD order, carrying
-    only (digit, iota) instead of payload columns — and composes them into
-    the same single permutation (equality is the §4.3 stability argument;
-    property-tested in tests/test_permutation.py). Either way, payload
-    columns cost one `apply_permutation` gather each, never one gather per
-    pass.
+    impl='pallas' (the default, via `kernels.ops.PARTITION_PLAN_IMPL`) runs
+    the sort-free rank pipeline: per-pass histogram -> exclusive prefix ->
+    stable ranks, LSD-composed for fan-outs past one pass — linear work per
+    pass, zero XLA sort primitives (jaxpr-pinned). PHJ, the partition
+    group-by, multi_pass_radix_partition, and the fused group-join all ride
+    it through this one entry point. impl='xla' keeps the stable-sort
+    reference arm: `max_pass_bits=None` computes the permutation with one
+    XLA stable sort; an integer runs the paper's multi-pass structure —
+    stable passes of <= max_pass_bits bits, LSD order — and composes them
+    into the same single permutation (equality is the §4.3 stability
+    argument; both arms are parity-tested in tests/test_permutation.py).
+    Either way, payload columns cost one `apply_permutation` gather each,
+    never one gather per pass.
 
-    `carry` columns ride the plan passes themselves (Algorithm 1's
-    key-rides-along idiom): they come back already partitioned, for free at
-    plan time instead of one unclustered gather each afterwards. Carry the
-    column(s) the next phase reads immediately (e.g. the group key);
-    everything else is cheaper via apply_permutation."""
-    n = digits.shape[0]
-    digits = digits.astype(jnp.int32)
-    iota = jnp.arange(n, dtype=jnp.int32)
-    if max_pass_bits is None:
-        res = jax.lax.sort((digits,) + tuple(carry) + (iota,), num_keys=1,
-                           is_stable=True)
-        carried, perm = res[1:-1], res[-1]
-    else:
-        total_bits = max(1, int(num_partitions - 1).bit_length())
-        perm = iota
-        cur = digits
-        carried = tuple(carry)
-        bit = 0
-        while bit < total_bits:
-            bits = min(max_pass_bits, total_bits - bit)
-            sub = (cur >> bit) & ((1 << bits) - 1)
-            res = jax.lax.sort((sub, cur) + carried + (perm,), num_keys=1,
-                               is_stable=True)
-            cur, carried, perm = res[1], res[2:-1], res[-1]
-            bit += bits
-    sizes = jnp.bincount(digits, length=num_partitions).astype(jnp.int32)
-    offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1].astype(jnp.int32)]
-    )
+    `carry` columns come back already partitioned (Algorithm 1's
+    key-rides-along idiom): the XLA arm carries them through its sort, the
+    rank arm materializes each with one gather through the composed
+    permutation — same contract, same values. Carry the column(s) the next
+    phase reads immediately (e.g. the group key)."""
+    from repro.kernels import ops as kops
+
+    impl = kops.PARTITION_PLAN_IMPL if impl is None else impl
+    perm, carried, offsets, sizes = kops.partition_plan(
+        digits, num_partitions, carry=carry, max_pass_bits=max_pass_bits,
+        impl=impl)
     if carry:
         return perm, carried, offsets, sizes
     return perm, offsets, sizes

@@ -93,7 +93,7 @@ def _group_by(node: P.PGroupBy, tables):
     return group_aggregate(
         t.select((node.key,) + tuple(c for c, _ in node.aggs)),
         key=node.key, aggs=dict(node.aggs), num_groups=node.capacity,
-        strategy=node.strategy,
+        strategy=node.strategy, **dict(node.agg_kw),
     )
 
 
@@ -117,6 +117,7 @@ def _group_join(node: P.PGroupJoin, tables):
         bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
         group_key=node.probe_group_key, aggs=dict(node.aggs),
         num_groups=node.capacity, agg_strategy=node.agg_strategy,
+        agg_kw=dict(node.agg_kw) or None,
     )
     if node.group_key != node.probe_group_key:
         # logical schema names the group column after the GroupBy key (the

@@ -187,6 +187,7 @@ class PGroupBy(PhysNode):
     key: str = ""
     aggs: tuple = ()
     strategy: str = "sort"
+    agg_kw: tuple = ()  # extra group_aggregate kwargs (multiplicity-scaled block)
     rationale: str = ""
 
     def children(self):
@@ -216,6 +217,7 @@ class PGroupJoin(PhysNode):
     probe_group_key: str = ""  # probe-side column actually grouped on
     aggs: tuple = ()
     agg_strategy: str = "sort"
+    agg_kw: tuple = ()  # extra accumulator kwargs (multiplicity-scaled block)
     rationale: str = ""
     join_stats: JoinStats | None = None
     phase_times: dict | None = None
@@ -688,7 +690,9 @@ class Optimizer:
         pass (which applies it to the join's PROBE side: masking unmatched
         rows only removes rows, so every proof below still holds there).
 
-        Returns (strategy, rationale, est_groups, cap, ks)."""
+        Returns (strategy, rationale, est_groups, cap, ks, agg_kw) — agg_kw
+        is a tuple of extra group_aggregate kwargs (the multiplicity-scaled
+        partition block) the executor forwards verbatim."""
         ks = src.col_stats.get(key)
         est_groups = min(ks.distinct if ks else src.est_rows, src.est_rows)
         # scatter indexes the accumulator BY key value and partition radix-
@@ -721,26 +725,48 @@ class Optimizer:
                 mult = self.catalog.max_multiplicity(origin, chain[1])
             else:
                 mult = float("inf")
-            if mult > PARTITION_ROW_BLOCK // 4:
+            # Bound: the layout targets E[partition rows] <= row_block/2,
+            # and a key's duplicates co-hash, so multiplicity m inflates the
+            # partition-size variance by m. The executor scales the block to
+            # PARTITION_ROW_BLOCK * m (below), which keeps the overflow tail
+            # at the m-clustered Poisson's 2x-mean point (~e^-0.386*block/2m,
+            # vanishing for block/m >= 128) — but only a PROVEN bound makes
+            # that sizing sound, and past 8 the padded slot space stops
+            # paying for itself (matching the chooser's rows/groups < 8
+            # routing threshold).
+            if mult > PARTITION_ROW_BLOCK // 16:
                 strategy = "sort"
                 rationale = (
                     f"high cardinality, but max key multiplicity "
                     f"{'unprovable' if mult == float('inf') else f'{mult:.0f}'}"
-                    f" exceeds the partition block's {PARTITION_ROW_BLOCK // 4}"
+                    f" exceeds the partition block's {PARTITION_ROW_BLOCK // 16}"
                     "-row safety bound -> exact sort")
+        agg_kw = ()
+        if strategy == "partition":
+            # Scale the padded block with the PROVEN multiplicity: a key's m
+            # duplicates land in one partition, so block/m must stay >= 128
+            # for the overflow tail to vanish. The layout keeps
+            # E[rows/partition] <= block/2 either way, so the slot space the
+            # blocked passes stream over stays ~2-4x n regardless of m.
+            m = 1 << max(int(mult) - 1, 0).bit_length()  # next pow2 >= mult
+            if m > 1:
+                agg_kw = (("row_block", PARTITION_ROW_BLOCK * m),)
         if strategy == "scatter":
             # scatter needs the accumulator to cover the dense domain
             cap = _round_capacity(float(ks.max) + 1, 1.0)
         else:
             cap = _round_capacity(est_groups, self.safety)
-        return strategy, rationale, est_groups, cap, ks
+        return strategy, rationale, est_groups, cap, ks, agg_kw
 
     def _group_by(self, node: L.GroupBy) -> PGroupBy:
         child = self._build(node.child)
-        strategy, rationale, est_groups, cap, ks = self._groupby_choice(
-            child, node.key)
+        strategy, rationale, est_groups, cap, ks, agg_kw = (
+            self._groupby_choice(child, node.key))
+        # price the geometry the executor will actually run — agg_kw carries
+        # the multiplicity-scaled partition block
         cost = predict_groupby_time(child.capacity, len(node.aggs), strategy,
-                                    self.profile)
+                                    self.profile,
+                                    row_block=dict(agg_kw).get("row_block"))
         # Fusion pass: a GroupBy directly over a provably pk_fk join can
         # fold the aggregation into the probe (core.groupjoin) and skip the
         # join materialization round trip entirely. Price both plans; keep
@@ -762,7 +788,7 @@ class Optimizer:
             origins={node.key: child.origins.get(node.key)},
             known_unique=frozenset({node.key}),  # one row per group
             child=child, key=node.key, aggs=tuple(node.aggs),
-            strategy=strategy, rationale=rationale,
+            strategy=strategy, agg_kw=agg_kw, rationale=rationale,
         )
 
     def _try_fuse_group_join(self, node: L.GroupBy, child: PhysNode,
@@ -802,13 +828,13 @@ class Optimizer:
         # side: the accumulator is GROUP-domain sized (never join-output
         # sized), and the integer-key / PR-3 partition-multiplicity proofs
         # transfer unchanged — masking unmatched rows only removes rows
-        strategy, _, est_groups, cap, ks = self._groupby_choice(probe,
-                                                                probe_gk)
+        strategy, _, est_groups, cap, ks, agg_kw = self._groupby_choice(
+            probe, probe_gk)
         build_aggs = sum(1 for c, _ in node.aggs if c not in probe.columns)
-        phases = predict_groupjoin_time(child.join_stats, len(node.aggs),
-                                        strategy, self.profile,
-                                        group_key_carried=(probe_gk == pk),
-                                        build_aggs=build_aggs)
+        phases = predict_groupjoin_time(
+            child.join_stats, len(node.aggs), strategy, self.profile,
+            group_key_carried=(probe_gk == pk), build_aggs=build_aggs,
+            agg_row_block=dict(agg_kw).get("row_block"))
         rationale = (
             f"fused: probe feeds the accumulator, join never materialized; "
             f"GroupJoin {phases['total']*1e6:.0f}us vs join+group-by "
@@ -822,7 +848,7 @@ class Optimizer:
             known_unique=frozenset({node.key}),  # one row per group
             build=build, probe=probe, build_key=bk, probe_key=pk,
             group_key=node.key, probe_group_key=probe_gk,
-            aggs=tuple(node.aggs), agg_strategy=strategy,
+            aggs=tuple(node.aggs), agg_strategy=strategy, agg_kw=agg_kw,
             rationale=rationale, join_stats=child.join_stats,
             phase_times=phases,
         )

@@ -1,8 +1,10 @@
-"""Pallas TPU kernels for the paper's compute hot-spots (validated with
-interpret=True on CPU; see DESIGN.md §2 for the CUDA->TPU mapping):
+"""Pallas TPU kernels for the paper's compute hot-spots (compiled on TPU,
+interpret mode elsewhere — `common.default_interpret`, override with
+REPRO_PALLAS_INTERPRET; see DESIGN.md §2/§10 for the CUDA->TPU mapping):
 
   histogram        - radix histogram (shared-memory atomics -> one-hot sums)
-  radix_partition  - stable partition ranks (two-pass, prefix sums)
+  radix_partition  - stable partition ranks + the sort-free multi-pass
+                     partition/sort planners (prefix sums, zero sort ops)
   merge_join       - windowed lower-bound (Merge Path -> VMEM rank count)
   hash_probe       - co-partition probe (shared-memory bucket -> VMEM block)
   gather           - clustered GATHER (coalescing -> VMEM window + one-hot matmul)
@@ -10,7 +12,8 @@ interpret=True on CPU; see DESIGN.md §2 for the CUDA->TPU mapping):
 """
 from . import ops, ref
 from .histogram import histogram_pallas
-from .radix_partition import partition_ranks_pallas, block_histograms_pallas
+from .radix_partition import (block_histograms_pallas, partition_plan_pallas,
+                              partition_ranks_pallas, sort_plan_radix)
 from .merge_join import lower_bound_windowed_pallas
 from .hash_probe import hash_probe_pallas, layout_probe_blocks
 from .gather import gather_windowed_pallas

@@ -6,16 +6,59 @@ Conventions (see DESIGN.md §2):
   * Integer payloads that flow through one-hot matmuls are split into 16-bit
     halves so the f32 MXU accumulates them exactly (values < 2^16 are exact
     in f32; the one-hot has a single 1 per row, so no rounding ever occurs).
-  * All kernels run under interpret=True on CPU (this container) and are
-    written with TPU BlockSpecs for the v5e target.
+  * Padding rows in digit arrays always carry PAD_DIGIT (< 0) and are
+    excluded from histograms/ranks by construction (`digit_onehot` masks
+    them), never by relying on a fill value happening to miss a bin.
+  * Kernels default to interpret mode off-TPU (`default_interpret`;
+    override with REPRO_PALLAS_INTERPRET=0/1) and are written with TPU
+    BlockSpecs for the v5e target.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 LANES = 128
 SUBLANES = 8
+
+# The single fill value for padded digit slots. Kernels exclude pad rows by
+# construction: `digit_onehot` masks x < 0 out of every histogram/rank
+# one-hot, so a pad row can never be counted or ranked into a bin.
+PAD_DIGIT = -1
+
+
+def default_interpret() -> bool:
+    """Pallas execution mode: compiled kernels on TPU, interpret elsewhere.
+
+    REPRO_PALLAS_INTERPRET=1/0 (also true/false/yes/no/on/off) overrides the
+    backend detection — e.g. force interpret on a TPU host while debugging,
+    or force compilation off-TPU to surface lowering errors."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:  # pragma: no cover - no backend at all
+        return True
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Kernel-entry helper: an explicit interpret flag wins, None defers to
+    the backend detection (+ env override) above."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def digit_onehot(x: jax.Array, num_bins: int) -> jax.Array:
+    """(T,) int digits -> (T, num_bins) 0/1 int32 one-hot.
+
+    The shared core of every histogram/rank kernel (and of their dense
+    interpret-mode twins): bin membership is an equality against a bin iota,
+    and pad rows (PAD_DIGIT, or any negative digit) are masked out
+    explicitly — excluded by construction, not by -1 never matching."""
+    bins = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], num_bins), 1)
+    return ((x[:, None] == bins) & (x[:, None] >= 0)).astype(jnp.int32)
 
 
 def pad_to(x: jax.Array, multiple: int, fill=0) -> jax.Array:
@@ -30,6 +73,18 @@ def as_lanes(x: jax.Array, fill=0) -> jax.Array:
     """(n,) -> (ceil(n/128), 128)."""
     xp = pad_to(x, LANES, fill)
     return xp.reshape(-1, LANES)
+
+
+def digit_lane_blocks(digits: jax.Array, block_rows: int) -> jax.Array:
+    """The one pad-and-tile path for digit arrays entering histogram/rank
+    kernels: (n,) -> (grid*block_rows, 128) with every padding slot —
+    lane padding and grid padding alike — filled with PAD_DIGIT. Pairs with
+    `digit_onehot`, which drops those rows by construction."""
+    d2 = as_lanes(digits, fill=PAD_DIGIT)
+    rows = d2.shape[0]
+    grid = ceil_div(rows, block_rows)
+    return jnp.pad(d2, ((0, grid * block_rows - rows), (0, 0)),
+                   constant_values=PAD_DIGIT)
 
 
 def split_u32_hi_lo(x: jax.Array):

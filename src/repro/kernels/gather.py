@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import ceil_div, split_u32_hi_lo, combine_u32_hi_lo
+from .common import ceil_div, combine_u32_hi_lo, resolve_interpret, split_u32_hi_lo
 
 
 def _gather_kernel(window_rows: int, is_int: bool, w_ref, idx_ref, lo_ref, hi_ref, out_ref):
@@ -44,7 +44,7 @@ def gather_windowed_pallas(
     *,
     window_rows: int = 1024,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """out[i] = src[idx[i]] for clustered idx. win_idx gives each tile's
     aligned window (units of window_rows); indices outside a tile's 2W
@@ -74,6 +74,6 @@ def gather_windowed_pallas(
         functools.partial(_gather_kernel, window_rows, bool(is_int)),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles, tile), src.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(win_idx, idx2, src2, src2)
     return out.reshape(-1)[:n_out]

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 KEY_SENTINEL = -1
 
 
@@ -44,7 +46,7 @@ def hash_probe_pallas(
     probe_blocks: jax.Array,  # (B, capS) partition-major padded probe keys
     block_part: jax.Array,  # (B,) partition id per probe sub-block
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Returns (vid, matched): (B, capS) int32 match position in the
     partitioned build array (or -1) and 0/1 hit flags."""
@@ -69,7 +71,7 @@ def hash_probe_pallas(
             jax.ShapeDtypeStruct((B, capS), jnp.int32),
             jax.ShapeDtypeStruct((B, capS), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_part.astype(jnp.int32), off_r.astype(jnp.int32), probe_blocks, bkeys)
     return vid, hit
 
@@ -136,7 +138,7 @@ def probe_agg_pallas(
     block_part: jax.Array,  # (B,) partition id per probe sub-block
     *,
     col_sides: tuple,  # static ("probe"|"build", within-side index) per output
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused probe+accumulate partials over any number of aggregate value
     columns in ONE probe pass. Returns (pkeys (B, capS), psums (B, C, capS),
@@ -173,7 +175,7 @@ def probe_agg_pallas(
             jax.ShapeDtypeStruct((B, C, capS), jnp.float32),
             jax.ShapeDtypeStruct((B, capS), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_part.astype(jnp.int32), probe_blocks, gk_blocks,
       pv_blocks.astype(jnp.float32), bkeys, bvals.astype(jnp.float32))
     return pk, ps, pc

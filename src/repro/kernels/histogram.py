@@ -5,6 +5,10 @@ Each step builds a block-local histogram by summing a one-hot expansion
 (dense VPU/MXU work — the TPU replacement for shared-memory atomics,
 DESIGN.md §2) and accumulates into the single (1, num_bins) output block,
 which stays VMEM-resident across the whole grid.
+
+The one-hot core (`common.digit_onehot`) is shared with the per-block
+histogram and rank kernels in radix_partition.py; padding rows carry
+PAD_DIGIT and are excluded from the counts by construction.
 """
 from __future__ import annotations
 
@@ -14,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import LANES, as_lanes, ceil_div
+from .common import (LANES, ceil_div, digit_lane_blocks, digit_onehot,
+                     resolve_interpret)
 
 
 def _hist_kernel(num_bins: int, x_ref, o_ref):
@@ -23,8 +28,7 @@ def _hist_kernel(num_bins: int, x_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...].reshape(-1)  # (rows*128,)
-    bins = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], num_bins), 1)
-    oh = (x[:, None] == bins).astype(jnp.int32)
+    oh = digit_onehot(x, num_bins)
     o_ref[...] += oh.sum(axis=0, keepdims=True)
 
 
@@ -33,20 +37,19 @@ def histogram_pallas(
     num_bins: int,
     *,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Counts per digit. digits int32; out-of-range digits are ignored
-    (padding uses -1). Returns (num_bins,) int32."""
-    d2 = as_lanes(digits, fill=-1)  # (R, 128)
-    rows = d2.shape[0]
-    grid = ceil_div(rows, block_rows)
-    d2 = jnp.pad(d2, ((0, grid * block_rows - rows), (0, 0)), constant_values=-1)
+    """Counts per digit. digits int32; padding/pad rows (PAD_DIGIT or any
+    negative digit) are excluded by construction. Returns (num_bins,)
+    int32."""
+    d2 = digit_lane_blocks(digits, block_rows)
+    grid = d2.shape[0] // block_rows
     out = pl.pallas_call(
         functools.partial(_hist_kernel, num_bins),
         grid=(grid,),
         in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, num_bins), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, num_bins), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(d2)
     return out[0]

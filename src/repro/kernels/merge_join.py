@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import ceil_div
+from .common import ceil_div, resolve_interpret
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -47,7 +47,7 @@ def lower_bound_windowed_pallas(
     *,
     window_rows: int = 1024,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """lb per probe element, given per-tile window indices (in units of
     window_rows). Caller guarantees the 2W window covers each tile's range
@@ -77,6 +77,6 @@ def lower_bound_windowed_pallas(
         functools.partial(_lb_kernel, window_rows),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(win_idx, probe2, build2, build2)
     return out.reshape(-1)[:n_p]

@@ -3,13 +3,17 @@
 Dispatch policy mirrors the paper's planner logic: the windowed (clustered)
 kernels are only profitable/correct when the gather map / merge frontier is
 clustered, so each wrapper measures the per-tile span (cheap, O(n/tile)) and
-falls back to XLA's random-access path otherwise. On this CPU container all
-kernels execute with interpret=True; on a real TPU set
-`repro.kernels.ops.INTERPRET = False`.
+falls back to XLA's random-access path otherwise.
+
+Execution mode is resolved per call (`common.resolve_interpret`): compiled
+kernels on TPU, interpret mode elsewhere; REPRO_PALLAS_INTERPRET=0/1
+overrides either way, and takes effect immediately — nothing is frozen at
+import time.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -18,13 +22,17 @@ import numpy as np
 from . import ref
 from .common import ceil_div
 from .histogram import histogram_pallas
-from .radix_partition import partition_ranks_pallas, block_histograms_pallas
+from .radix_partition import (block_histograms_pallas, partition_plan_pallas,
+                              partition_ranks_pallas, sort_plan_radix)
 from .merge_join import lower_bound_windowed_pallas
 from .hash_probe import hash_probe_pallas, layout_probe_blocks, probe_agg_pallas
 from .gather import gather_windowed_pallas
 from .segsum import segsum_partials_pallas
 
-INTERPRET = True  # CPU container: interpret-mode execution of kernel bodies
+# Production arm of the partition planner (core.primitives resolves its
+# impl=None through this): 'pallas' = the sort-free histogram/rank pipeline,
+# 'xla' = the stable-sort reference. Env knob for A/B and bisection.
+PARTITION_PLAN_IMPL = os.environ.get("REPRO_PARTITION_PLAN_IMPL", "pallas")
 
 KEY_SENTINEL = -1
 
@@ -34,19 +42,87 @@ KEY_SENTINEL = -1
 # ---------------------------------------------------------------------------
 def histogram(digits: jax.Array, num_bins: int, impl: str = "pallas") -> jax.Array:
     if impl == "pallas":
-        return histogram_pallas(digits, num_bins, interpret=INTERPRET)
+        return histogram_pallas(digits, num_bins, interpret=None)
     return ref.histogram(digits, num_bins)
 
 
 def partition_ranks(digits: jax.Array, num_bins: int, impl: str = "pallas"):
     """dest position per element (stable partition)."""
     if impl == "pallas":
-        dest, off, sz = partition_ranks_pallas(digits, num_bins, interpret=INTERPRET)
+        dest, off, sz = partition_ranks_pallas(digits, num_bins, interpret=None)
         return dest, off, sz
     dest = ref.partition_ranks(digits, num_bins)
     sz = ref.histogram(digits, num_bins)
     off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sz)[:-1].astype(jnp.int32)])
     return dest, off, sz
+
+
+# ---------------------------------------------------------------------------
+# partition / sort planning (one-permutation layer backends)
+# ---------------------------------------------------------------------------
+def partition_plan(digits: jax.Array, num_partitions: int, *, carry=(),
+                   max_pass_bits: int | None = None, impl: str = "pallas",
+                   pass_impl: str = "auto"):
+    """Stable-partition plan: (perm, carried, offsets, sizes), all layout
+    arrays int32. The production entry behind
+    `core.primitives.plan_partition_permutation`.
+
+    impl='pallas': the sort-free rank pipeline (per-pass histogram ->
+    block/digit exclusive prefix -> stable ranks, LSD-composed past one
+    pass's bin budget) — O(n) per pass, zero sort primitives in the jaxpr.
+    impl='xla': the stable-sort reference arm (the previous production
+    path), kept for parity testing and as the conservative fallback;
+    `max_pass_bits` there runs the paper's multi-pass composition with
+    sorts standing in for the rank passes.
+
+    Both arms return bit-identical results — the stable partition
+    permutation is unique (tests/test_permutation.py pins the parity)."""
+    if impl == "pallas":
+        return partition_plan_pallas(
+            digits, num_partitions, carry=carry, max_pass_bits=max_pass_bits,
+            pass_impl=pass_impl, interpret=None)
+    if impl != "xla":
+        raise ValueError(f"unknown partition plan impl {impl!r}")
+    n = digits.shape[0]
+    digits = digits.astype(jnp.int32)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    if max_pass_bits is None:
+        res = jax.lax.sort((digits,) + tuple(carry) + (iota,), num_keys=1,
+                           is_stable=True)
+        carried, perm = res[1:-1], res[-1]
+    else:
+        total_bits = max(1, int(num_partitions - 1).bit_length())
+        perm = iota
+        cur = digits
+        carried = tuple(carry)
+        bit = 0
+        while bit < total_bits:
+            bits = min(max_pass_bits, total_bits - bit)
+            sub = (cur >> bit) & ((1 << bits) - 1)
+            res = jax.lax.sort((sub, cur) + carried + (perm,), num_keys=1,
+                               is_stable=True)
+            cur, carried, perm = res[1], res[2:-1], res[-1]
+            bit += bits
+    sizes = jnp.bincount(digits, length=num_partitions).astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)[:-1].astype(jnp.int32)]
+    )
+    return perm, carried, offsets, sizes
+
+
+def sort_plan(keys: jax.Array, impl: str = "xla"):
+    """Stable sort plan: (sorted_keys, perm). impl='xla' is the production
+    arm (XLA's tuned sort — the paper's vendor-primitive choice, §2.3);
+    impl='radix' composes the same sort-free rank passes over the full
+    sign-biased key pattern (int32 keys), for radix-hardware parity and
+    fully sort-free pipelines."""
+    if impl == "radix":
+        return sort_plan_radix(keys, interpret=None)
+    if impl != "xla":
+        raise ValueError(f"unknown sort plan impl {impl!r}")
+    iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    sk, perm = jax.lax.sort((keys, iota), num_keys=1, is_stable=True)
+    return sk, perm
 
 
 def apply_partition(dest: jax.Array, *arrays: jax.Array):
@@ -90,7 +166,7 @@ def merge_lower_bound(
             return ref.lower_bound(build_sorted, probe_sorted)
     return lower_bound_windowed_pallas(
         build_sorted, probe_sorted, win_idx,
-        window_rows=window_rows, tile=tile, interpret=INTERPRET,
+        window_rows=window_rows, tile=tile, interpret=None,
     )
 
 
@@ -120,7 +196,7 @@ def hash_probe(
     cap_s = cap_r
     max_blocks = ceil_div(n, cap_s) + P
     pk, part, src_idx = layout_probe_blocks(probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
-    vid, hit = hash_probe_pallas(bkeys, off_r, pk, part, interpret=INTERPRET)
+    vid, hit = hash_probe_pallas(bkeys, off_r, pk, part, interpret=None)
     # scatter sub-block results back to partitioned probe order
     flat_src = src_idx.reshape(-1)
     ok = flat_src >= 0
@@ -228,7 +304,7 @@ def groupjoin_probe_agg(
                              ).transpose(1, 0, 2), 0.0)
     pkeys, psums, pcounts = probe_agg_pallas(
         bkeys, bvals, pk, gkb, pvb, part,
-        col_sides=tuple(col_sides), interpret=INTERPRET)
+        col_sides=tuple(col_sides), interpret=None)
     C = len(col_sides)
     keys_o, sums_o, counts_o, found = _combine_group_partials(
         pkeys.reshape(-1),
@@ -265,7 +341,7 @@ def clustered_gather(
             out = jnp.take(src, safe_idx, axis=0)
             return jnp.where(idx >= 0, out, 0)
     out = gather_windowed_pallas(
-        src, safe_idx, win_idx, window_rows=window_rows, tile=tile, interpret=INTERPRET
+        src, safe_idx, win_idx, window_rows=window_rows, tile=tile, interpret=None
     )
     return jnp.where(idx >= 0, out, 0)
 
@@ -284,7 +360,7 @@ def groupby_sorted_sum(
     """Group sums over key-sorted rows: Pallas tile partials + host combine.
     Returns (group_keys, group_sums, count)."""
     if impl == "pallas":
-        pk, ps, pc = segsum_partials_pallas(sorted_keys, values, tile=tile, interpret=INTERPRET)
+        pk, ps, pc = segsum_partials_pallas(sorted_keys, values, tile=tile, interpret=None)
     else:
         pk, ps, pc = ref.segsum_partials(sorted_keys, values, tile)
     # combine partials: they are key-sorted except sentinel slots; re-sort.

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import ceil_div, split_u32_hi_lo, combine_u32_hi_lo
+from .common import ceil_div, combine_u32_hi_lo, resolve_interpret, split_u32_hi_lo
 
 KEY_SENTINEL = -1
 
@@ -45,7 +45,7 @@ def segsum_partials_pallas(
     values: jax.Array,
     *,
     tile: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Per-tile (keys, sums, counts) partials over key-sorted input.
     Matches ref.segsum_partials."""
@@ -74,6 +74,6 @@ def segsum_partials_pallas(
             jax.ShapeDtypeStruct((n_tiles, tile), jnp.float32),
             jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(kp, vp)
     return pk.reshape(-1), ps.reshape(-1), pc.reshape(-1)

@@ -346,6 +346,27 @@ def test_groupby_partition_guarded_by_provable_multiplicity():
     assert int(count) == len(set(keys.tolist()))
 
 
+def test_groupby_partition_block_scales_with_proven_multiplicity():
+    """A provable multiplicity within the safety bound keeps the partition
+    strategy but scales the padded block: m duplicates of a key co-hash, so
+    the executor must run with row_block >= PARTITION_ROW_BLOCK * m for the
+    overflow tail to stay negligible — and the result must be exact."""
+    from repro.core.groupby import PARTITION_ROW_BLOCK
+
+    rng = np.random.default_rng(5)
+    base = (rng.permutation(3000).astype(np.int64) * 1315423911 % (1 << 30))
+    keys = np.repeat(base, 6).astype(np.int32)  # exact multiplicity 6
+    rng.shuffle(keys)
+    t = Table({"k": jnp.asarray(keys), "v": jnp.ones(keys.size, jnp.float32)})
+    cat = Catalog({"t": t})
+    plan = optimize(scan("t").group_by("k", v="sum"), cat, **OPT)
+    assert plan.root.strategy == "partition", plan.root.rationale
+    kw = dict(plan.root.agg_kw)
+    assert kw.get("row_block") == PARTITION_ROW_BLOCK * 8  # next pow2 of 6
+    _, count = plan.run()
+    assert int(count) == len(set(keys.tolist()))
+
+
 def test_groupby_float_keys_never_scatter():
     """Float keys would be int-floored by the scatter accumulator, merging
     distinct groups; the planner must route them to a sort-based strategy."""

@@ -234,13 +234,13 @@ def test_partition_overflow_check_detects_heavy_key(rng):
 
 def test_partition_layout_grows_block_past_fanout_cap():
     """Past the 16-bit fan-out cap the BLOCK must grow to keep
-    E[rows/partition] <= row_block/4 — silently over-filling every partition
+    E[rows/partition] <= row_block/2 — silently over-filling every partition
     would drop each partition's overhang, not a tail."""
     from repro.core.groupby import _partition_layout
 
     p_bits, rb = _partition_layout(1 << 22, 64, None)
     assert p_bits == 16
-    assert rb >= 4 * (1 << 22) / (1 << 16)  # invariant holds via the block
+    assert rb >= 2 * (1 << 22) / (1 << 16)  # invariant holds via the block
     # explicit bits pin the caller's geometry (checked driver relies on it)
     assert _partition_layout(1 << 22, 64, 9) == (9, 64)
     # small inputs are untouched

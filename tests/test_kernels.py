@@ -41,6 +41,44 @@ def test_partition_ranks_sweep(n, bins, seed):
     assert bool((jnp.diff(outs[0]) >= 0).all())
 
 
+def test_pad_rows_excluded_by_construction(rng):
+    """Histogram/rank kernels must exclude PAD_DIGIT rows via the explicit
+    mask in `digit_onehot` — any negative digit counts nowhere and gets no
+    destination, however the bins are laid out."""
+    from repro.kernels.common import digit_onehot
+    from repro.kernels.radix_partition import block_histograms_pallas
+
+    d = np.asarray(rng.integers(0, 16, 100).astype(np.int32))
+    d[::7] = -1  # explicit pad/sentinel rows inside the data
+    dj = jnp.asarray(d)
+    assert int(histogram_pallas(dj, 16).sum()) == int((d >= 0).sum())
+    assert int(block_histograms_pallas(dj, 16).sum()) == int((d >= 0).sum())
+    dest, _, sizes = partition_ranks_pallas(dj, 16)
+    assert int(sizes.sum()) == int((d >= 0).sum())
+    assert (np.asarray(dest)[d < 0] == -1).all()
+    # the shared one-hot core masks any negative digit, not just -1
+    oh = np.asarray(digit_onehot(jnp.asarray([-5, 0, 3, -1], jnp.int32), 4))
+    np.testing.assert_array_equal(oh.sum(axis=1), [0, 1, 1, 0])
+
+
+def test_interpret_resolution_env_override(monkeypatch):
+    """Backend detection picks interpret off-TPU; REPRO_PALLAS_INTERPRET
+    overrides it both ways."""
+    from repro.kernels import common
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert common.default_interpret() == (not on_tpu)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert common.default_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert common.default_interpret() is True
+    assert common.resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "off")
+    assert common.resolve_interpret(None) is False
+    assert common.resolve_interpret(True) is True  # explicit flag wins
+
+
 @settings(max_examples=10, deadline=None)
 @given(nb=st.integers(10, 4000), npr=st.integers(10, 4000),
        seed=st.integers(0, 2**31 - 1))

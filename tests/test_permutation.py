@@ -19,16 +19,23 @@ from repro.kernels import ops as kops
 def test_multi_pass_plan_equals_direct_stable_partition(n, bits, seed):
     """Composing stable <=8-bit passes (carrying only digit+iota) must equal
     the single stable partition on all bits — the §4.3 stability argument the
-    whole layer rests on."""
+    whole layer rests on — and the production (sort-free rank pipeline)
+    plan must equal both: the stable partition permutation is unique."""
     rng = np.random.default_rng(seed)
     digits = jnp.asarray(rng.integers(0, 1 << bits, n).astype(np.int32))
-    direct, off_d, sz_d = prim.plan_partition_permutation(digits, 1 << bits)
+    direct, off_d, sz_d = prim.plan_partition_permutation(
+        digits, 1 << bits, impl="xla")
     composed, off_c, sz_c = prim.plan_partition_permutation(
-        digits, 1 << bits, max_pass_bits=8)
+        digits, 1 << bits, max_pass_bits=8, impl="xla")
+    ranked, off_r, sz_r = prim.plan_partition_permutation(
+        digits, 1 << bits, impl="pallas")
     np.testing.assert_array_equal(np.asarray(direct), np.asarray(composed))
     np.testing.assert_array_equal(np.asarray(off_d), np.asarray(off_c))
     np.testing.assert_array_equal(np.asarray(sz_d), np.asarray(sz_c))
-    # and both equal numpy's stable argsort
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(ranked))
+    np.testing.assert_array_equal(np.asarray(off_d), np.asarray(off_r))
+    np.testing.assert_array_equal(np.asarray(sz_d), np.asarray(sz_r))
+    # and all equal numpy's stable argsort
     np.testing.assert_array_equal(
         np.asarray(direct), np.argsort(np.asarray(digits), kind="stable"))
 
@@ -141,17 +148,19 @@ def test_smj_gftr_plans_one_sort_per_side_regardless_of_payload_width(rng):
     assert _count_sorts(jaxpr.jaxpr) == 2
 
 
-def test_phj_gftr_plans_one_partition_per_side_regardless_of_payload_width(rng):
+def test_phj_is_sort_free_regardless_of_payload_width(rng):
+    """The kernel-backed partition planner removed PHJ's last sorts: both
+    sides' plans are histogram/rank pipelines now (DESIGN.md §10)."""
     import jax
     from repro.core import phj_join
 
     R, S = _wide_tables(rng)
     jaxpr = jax.make_jaxpr(lambda a, b: phj_join(
         a, b, key="k", pattern="gftr", mode="mn", out_size=2048))(R, S)
-    assert _count_sorts(jaxpr.jaxpr) == 2
+    assert _count_sorts(jaxpr.jaxpr) == 0
 
 
-def test_groupby_partition_plans_one_partition_sort(rng):
+def test_groupby_partition_plans_zero_sorts_plus_block_local(rng):
     import jax
     from repro.core import group_aggregate
 
@@ -159,9 +168,107 @@ def test_groupby_partition_plans_one_partition_sort(rng):
     aggs = {c: "sum" for c in t.column_names if c != "k"}
     jaxpr = jax.make_jaxpr(lambda tb: group_aggregate(
         tb, key="k", aggs=aggs, num_groups=128, strategy="partition"))(t)
-    # one plan sort (digits, carried key, iota) + one block-local sort;
-    # payload width never adds sorts
-    assert _count_sorts(jaxpr.jaxpr) == 2
+    # the partition PLAN is sort-free; the single remaining sort is the
+    # block-local (VMEM-resident) grouping sort, and payload width never
+    # adds sorts — every aggregate input rides the one variadic block sort
+    assert _count_sorts(jaxpr.jaxpr) == 1
+
+
+def test_partition_plan_default_emits_zero_sort_primitives(rng):
+    """The tentpole pin: the production `plan_partition_permutation` — with
+    carry columns, with the sentinel-tail fan-out, and past one pass's bin
+    budget — compiles to a jaxpr with NO sort primitive at all."""
+    import jax
+
+    digits = jnp.asarray(rng.integers(0, 257, 1024).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, 99, 1024).astype(np.int32))
+    jx = jax.make_jaxpr(lambda d, k: prim.plan_partition_permutation(
+        d, 257, carry=(k,)))(digits, keys)
+    assert _count_sorts(jx.jaxpr) == 0
+    # >256 partitions: LSD multi-pass composition, still sort-free
+    wide = jnp.asarray(rng.integers(0, 1 << 12, 1024).astype(np.int32))
+    jx2 = jax.make_jaxpr(
+        lambda d: prim.plan_partition_permutation(d, 1 << 12))(wide)
+    assert _count_sorts(jx2.jaxpr) == 0
+    # and multi_pass_radix_partition rides the same sort-free path
+    jx3 = jax.make_jaxpr(lambda k: prim.multi_pass_radix_partition(
+        k, total_bits=12))(keys)
+    assert _count_sorts(jx3.jaxpr) == 0
+
+
+# ---------------------------------------------------------------------------
+# Pallas/XLA planner parity: (perm, carried, offsets, sizes) across
+# cardinality x skew x sentinel grids, and the >256-partition composition
+# ---------------------------------------------------------------------------
+def _parity_digits(rng, n, num_partitions, dist):
+    if dist == "uniform":
+        d = rng.integers(0, num_partitions, n)
+    elif dist == "skew":  # heavy hitters: most digits collapse onto a few
+        d = (rng.zipf(1.3, n) - 1) % num_partitions
+    elif dist == "sentinel":  # groupby shape: a pad block floods the top
+        d = np.concatenate([rng.integers(0, num_partitions - 1, n // 2),
+                            np.full(n - n // 2, num_partitions - 1)])
+    else:  # single partition
+        d = np.full(n, min(3, num_partitions - 1))
+    return jnp.asarray(d.astype(np.int32))
+
+
+@pytest.mark.parametrize("dist", ["uniform", "skew", "sentinel", "single"])
+@pytest.mark.parametrize("n,num_partitions", [
+    (1, 2), (600, 64), (1000, 257), (2000, 1 << 10), (1500, 1 << 12)])
+def test_partition_plan_pallas_xla_parity(rng, n, num_partitions, dist):
+    digits = _parity_digits(rng, n, num_partitions, dist)
+    carry = (jnp.asarray(rng.integers(0, 1 << 20, n).astype(np.int32)),
+             jnp.asarray(rng.normal(size=n).astype(np.float32)))
+    gp, gc, go, gs = prim.plan_partition_permutation(
+        digits, num_partitions, carry=carry, impl="pallas")
+    xp, xc, xo, xs = prim.plan_partition_permutation(
+        digits, num_partitions, carry=carry, impl="xla")
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(xp))
+    for a, b in zip(gc, xc):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(xo))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(xs))
+
+
+def test_partition_plan_forced_kernel_pipeline_parity(rng):
+    """The real pallas_call pipeline (block histograms -> block x digit
+    prefix -> rank kernel), multi-pass composed, equals the sort arm — the
+    TPU code path exercised in interpret mode, not just its dense twin."""
+    digits = jnp.asarray(rng.integers(0, 300, 700).astype(np.int32))
+    keys = jnp.asarray(rng.integers(0, 1 << 16, 700).astype(np.int32))
+    kp, (kc,), ko, ks_ = kops.partition_plan(
+        digits, 300, carry=(keys,), impl="pallas", pass_impl="kernel")
+    xp, (xc,), xo, xs = kops.partition_plan(
+        digits, 300, carry=(keys,), impl="xla")
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(xp))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(xc))
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(xo))
+    np.testing.assert_array_equal(np.asarray(ks_), np.asarray(xs))
+
+
+def test_sort_plan_radix_equals_xla_sort(rng):
+    """The sort-free full-key sort plan (sign-biased LSD rank passes) equals
+    XLA's stable sort bit-for-bit — negative keys included."""
+    keys = jnp.asarray(
+        rng.integers(-(1 << 31), (1 << 31) - 1, 1200).astype(np.int64)
+        .astype(np.int32))
+    sk_r, pr = prim.plan_sort_permutation(keys, impl="radix")
+    sk_x, px = prim.plan_sort_permutation(keys, impl="xla")
+    np.testing.assert_array_equal(np.asarray(sk_r), np.asarray(sk_x))
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(px))
+    # unsigned keys take NO sign bias: full uint32 range, high bit set
+    ukeys = jnp.asarray(np.array([0, 0x80000000, 5, 0xFFFFFFFF, 0x7FFFFFFF],
+                                 np.uint32))
+    usk_r, upr = prim.plan_sort_permutation(ukeys, impl="radix")
+    usk_x, upx = prim.plan_sort_permutation(ukeys, impl="xla")
+    np.testing.assert_array_equal(np.asarray(usk_r), np.asarray(usk_x))
+    np.testing.assert_array_equal(np.asarray(upr), np.asarray(upx))
+    import jax
+
+    jx = jax.make_jaxpr(
+        lambda k: prim.plan_sort_permutation(k, impl="radix"))(keys)
+    assert _count_sorts(jx.jaxpr) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -178,10 +285,12 @@ def test_layout_dtypes_are_int32(rng):
 
     perm, off, sz = prim.partition_permutation(digits, 64)
     _assert_int32(perm, off, sz)
-    perm, off, sz = prim.plan_partition_permutation(digits, 64)
-    _assert_int32(perm, off, sz)
-    perm, off, sz = prim.plan_partition_permutation(digits, 64, max_pass_bits=4)
-    _assert_int32(perm, off, sz)
+    for impl in ("pallas", "xla"):
+        perm, off, sz = prim.plan_partition_permutation(digits, 64, impl=impl)
+        _assert_int32(perm, off, sz)
+        perm, off, sz = prim.plan_partition_permutation(
+            digits, 64, max_pass_bits=4, impl=impl)
+        _assert_int32(perm, off, sz)
     *_, off, sz = prim.multi_pass_radix_partition(keys, total_bits=12)
     _assert_int32(off, sz)
     *_, off, sz = prim.radix_partition(keys, start_bit=0, num_bits=6)
@@ -190,4 +299,6 @@ def test_layout_dtypes_are_int32(rng):
         dest, off, sz = kops.partition_ranks(digits, 64, impl)
         _assert_int32(dest, off, sz)
     _, perm = prim.plan_sort_permutation(keys)
+    _assert_int32(perm)
+    _, perm = prim.plan_sort_permutation(keys, impl="radix")
     _assert_int32(perm)
