@@ -7,22 +7,39 @@ emit `name,us_per_call,derived` CSV rows, where `derived` carries the
 figure-relevant ratio (speedup, GB/s-equivalent, bytes)."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 # default row counts (CPU-feasible; override with REPRO_BENCH_SCALE env)
-import os
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 N_BASE = int((1 << 18) * SCALE)  # 262k rows ~ "1G"-analogue unit
 
 ROWS = []
 
+# structural fingerprints (repro.analysis): {row_name/__structure: {budget,
+# peak_live_bytes}}, merged into the BENCH_*.json trajectories so a perf
+# regression can be told apart from a *plan-shape* regression (a timing
+# delta with an unchanged fingerprint is machine noise or a runtime change;
+# a changed fingerprint means a different plan compiled).
+FINGERPRINTS = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def fingerprint(name: str, fn, *args):
+    """Record fn's compiled-plan fingerprint under `name/__structure`."""
+    from repro.analysis import audit_fn
+
+    rep = audit_fn(fn, *args)
+    FINGERPRINTS[f"{name}/__structure"] = {
+        "budget": rep.budget.as_dict(),
+        "peak_live_bytes": int(rep.peak_live_bytes),
+    }
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:

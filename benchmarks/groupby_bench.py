@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import Table, group_aggregate
 
-from .common import N_BASE, emit, time_fn
+from .common import N_BASE, emit, fingerprint, time_fn
 
 
 def cardinality_sweep():
@@ -97,6 +97,7 @@ def partition_sweep():
                 num_groups=2 * distinct + 64, strategy=strat))
             jax.block_until_ready(f(t))  # compile + warm outside the timing
             fns[strat] = f
+            fingerprint(f"groupby/partition/G{g}/{strat}", f, t)
         samples = {s: [] for s in strats}
         for _ in range(7):
             for strat in strats:

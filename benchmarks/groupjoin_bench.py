@@ -14,11 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (JoinStats, Table, group_aggregate, join,
-                        phj_groupjoin, predict_groupby_time,
-                        predict_groupjoin_time, predict_join_time)
+from repro.core import (JoinStats, Table, group_aggregate, join, phj_groupjoin,
+                        predict_groupby_time, predict_groupjoin_time, predict_join_time)
 
-from .common import N_BASE, emit, time_fn
+from .common import N_BASE, emit, fingerprint, time_fn
 
 
 def _workload(rng, n_r, n_s, n_groups, extra_probe_cols=1):
@@ -80,6 +79,10 @@ def fused_vs_unfused():
             agg_strategy=strategy))
         us_un = time_fn(f_un, R, S)
         us_fu = time_fn(f_fu, R, S)
+        fingerprint(f"groupjoin/G{n_groups}/x{extra}/{strategy}/fused",
+                    f_fu, R, S)
+        fingerprint(f"groupjoin/G{n_groups}/x{extra}/{strategy}/unfused",
+                    f_un, R, S)
         model = _model_speedup(n_r, n_s, 1, 2 + extra, len(aggs), strategy,
                                build_aggs=1)  # rv comes from the build side
         emit(f"groupjoin/G{n_groups}/x{extra}/{strategy}/fused", us_fu,
@@ -108,6 +111,11 @@ def engine_fusion():
                         force_join=("phj", "gftr"))
     us_plan = time_fn(lambda: plan.run())
     us_base = time_fn(lambda: baseline.run())
+    from repro.engine import executor
+
+    fingerprint("groupjoin/engine/planned",
+                lambda tb: executor.execute(plan.root, tb),
+                {"R": R, "S": S})
     emit("groupjoin/engine/planned", us_plan,
          f"{'fused' if fused else 'unfused'}; predicted "
          f"{plan.total_cost*1e6:.0f}us; forced-unfused {us_base:.0f}us; "

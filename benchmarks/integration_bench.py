@@ -10,12 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MoEConfig
+from repro.data.pipeline import (FeatureJoinConfig, assemble_batch, history_aggregates,
+                                 make_dim_tables, make_fact_batch)
+from repro.kernels import ops as kops
 from repro.models import moe as MOE
 from repro.models.params import init_from_template
-from repro.data.pipeline import (FeatureJoinConfig, assemble_batch,
-                                 history_aggregates, make_dim_tables,
-                                 make_fact_batch)
-from repro.kernels import ops as kops
 
 from .common import N_BASE, emit, time_fn
 
@@ -65,6 +64,7 @@ def kernel_vs_xla():
 
     b = jnp.sort(jnp.asarray(rng.integers(0, 1 << 29, n).astype(np.int32)))
     p = jnp.sort(jnp.asarray(rng.integers(0, 1 << 29, n).astype(np.int32)))
-    emit("kernels/merge_lb/xla", time_fn(lambda a, c: kops.merge_lower_bound(a, c, "xla"), b, p), "")
+    emit("kernels/merge_lb/xla",
+         time_fn(lambda a, c: kops.merge_lower_bound(a, c, "xla"), b, p), "")
     emit("kernels/merge_lb/pallas-interpret",
          time_fn(lambda a, c: kops.merge_lower_bound(a, c, "pallas"), b, p), "validated==xla")

@@ -10,10 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Table, join, join_sequence, by_name, KEY_SENTINEL
+from repro.core import by_name, join, join_sequence
 from repro.core import primitives as prim
-from repro.core.planner import JoinStats, choose_algorithm, predict_join_time
 from repro.core.memmodel import peak_memory_bytes
+from repro.core.planner import JoinStats, choose_algorithm, predict_join_time
 from repro.data import relgen
 
 from .common import N_BASE, emit, join_throughput, time_fn
@@ -180,8 +180,8 @@ def table5_memory():
         for itemsize, tag in ((4, "4B"), (8, "8B")):
             b = peak_memory_bytes(pat, N_BASE, itemsize)
             emit(f"table5/{pat}/{tag}", 0.0, f"peak={b/1e6:.1f}MB")
-    emit("table5/ordering", 0.0,
-         f"gftr<=gfur: {peak_memory_bytes('gftr', N_BASE, 4) <= peak_memory_bytes('gfur', N_BASE, 4)}")
+    ordered = peak_memory_bytes("gftr", N_BASE, 4) <= peak_memory_bytes("gfur", N_BASE, 4)
+    emit("table5/ordering", 0.0, f"gftr<=gfur: {ordered}")
 
 
 def fig16_join_sequences():

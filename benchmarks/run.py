@@ -88,8 +88,13 @@ def main() -> None:
         "BENCH_joins.json": lambda n: n.startswith(("fig", "table")),
         "BENCH_groupjoin.json": lambda n: n.startswith("groupjoin"),
     }
+    from benchmarks.common import FINGERPRINTS
+
     for fname, pred in files.items():
         rows = {name: us for name, us, _ in ROWS if pred(name)}
+        # ride the structural fingerprints (primitive budget + peak live
+        # bytes per plan) along with the timings they describe
+        rows.update({k: v for k, v in FINGERPRINTS.items() if pred(k)})
         if rows:
             import json
 

@@ -8,6 +8,29 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
+# Lint gate (pycodestyle+pyflakes+import-order via pyproject's ruff
+# config). The CI container cannot pip-install; run whenever ruff exists.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks
+    echo "ci: ruff lint OK"
+else
+    echo "ci: ruff not installed; skipping lint gate"
+fi
+
+# Static-analysis hard gate: every production operator entry point, Pallas
+# kernel, and optimizer-chosen plan must honor its priced contract
+# (repro.analysis sweeps them and exits non-zero on any ContractViolation).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.analysis --out ANALYSIS.json > /dev/null
+test -s ANALYSIS.json
+python - <<'PY'
+import json
+rep = json.load(open("ANALYSIS.json"))
+assert rep["summary"]["violations"] == 0, rep["summary"]
+assert rep["operators"] and rep["kernels"] and rep["engine"]
+PY
+echo "ci: repro.analysis contract sweep OK (ANALYSIS.json, 0 violations)"
+
 # Smoke-scale end-to-end benchmark (engine section only): catches benchmark
 # bitrot — a benchmark that no longer runs fails CI instead of rotting.
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
@@ -29,6 +52,11 @@ for kind in ("speedup_vs_sort_measured", "speedup_vs_sort_modeled"):
     keys = [k for k in rows if k.endswith(kind)]
     assert keys, f"BENCH_groupby.json is missing {kind} trajectory keys"
     assert all(rows[k] > 0 for k in keys), (kind, keys)
+# every timing trajectory carries its structural fingerprint (plan budget
+# + peak live bytes) so perf and plan-shape regressions are separable
+fps = [k for k in rows if k.endswith("__structure")]
+assert fps, "BENCH_groupby.json is missing __structure fingerprints"
+assert all("budget" in rows[k] and "peak_live_bytes" in rows[k] for k in fps)
 PY
 echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json + speedup keys)"
 
@@ -38,4 +66,11 @@ echo "ci: smoke-scale groupby/partition benchmark OK (BENCH_groupby.json + speed
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run groupjoin > /dev/null
 test -s BENCH_groupjoin.json
-echo "ci: smoke-scale groupjoin benchmark OK (BENCH_groupjoin.json)"
+python - <<'PY'
+import json
+rows = json.load(open("BENCH_groupjoin.json"))
+fps = [k for k in rows if k.endswith("__structure")]
+assert fps, "BENCH_groupjoin.json is missing __structure fingerprints"
+assert all("budget" in rows[k] and "peak_live_bytes" in rows[k] for k in fps)
+PY
+echo "ci: smoke-scale groupjoin benchmark OK (BENCH_groupjoin.json + fingerprints)"

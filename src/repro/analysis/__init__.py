@@ -1,0 +1,31 @@
+"""repro.analysis — static analysis over jaxprs and physical plans.
+
+Proves that every compiled plan honors its priced contract (DESIGN.md
+§11): `jaxpr_audit` counts plan-shaping primitives and tracks a liveness
+watermark, `kernel_lint` statically checks Pallas kernels (VMEM fit,
+grid-output aliasing, scatter discipline), `contracts` holds each
+operator's promised budget and the typed `ContractViolation` hierarchy.
+`python -m repro.analysis` sweeps every production entry point and writes
+ANALYSIS.json (a hard CI gate)."""
+from .contracts import (ContractViolation, DtypePromotionViolation, FloatScatterViolation,
+                        GridAliasViolation, MaterializationViolation, OperatorContract,
+                        SortBudgetViolation, VmemBudgetViolation, check, contract_for_node,
+                        enforce, groupby_contract, groupjoin_contract, join_contract,
+                        orderby_contract, partition_plan_contract, passthrough_contract)
+from .jaxpr_audit import (AuditReport, PrimitiveBudget, audit_fn, audit_jaxpr, budget_of,
+                          budget_of_jaxpr, count_sorts, liveness_peak, walk_eqns)
+from .kernel_lint import KernelLintReport, lint_fn, lint_pallas_eqn, lint_production_kernels
+
+__all__ = [
+    "AuditReport", "PrimitiveBudget", "audit_fn", "audit_jaxpr",
+    "budget_of", "budget_of_jaxpr", "count_sorts", "liveness_peak",
+    "walk_eqns",
+    "ContractViolation", "SortBudgetViolation", "MaterializationViolation",
+    "DtypePromotionViolation", "FloatScatterViolation",
+    "VmemBudgetViolation", "GridAliasViolation",
+    "OperatorContract", "check", "enforce", "contract_for_node",
+    "join_contract", "groupby_contract", "groupjoin_contract",
+    "orderby_contract", "passthrough_contract", "partition_plan_contract",
+    "KernelLintReport", "lint_fn", "lint_pallas_eqn",
+    "lint_production_kernels",
+]

@@ -1,0 +1,195 @@
+"""`python -m repro.analysis` — sweep every production entry point, audit
+each compiled plan against its priced contract, lint every Pallas kernel,
+and write ANALYSIS.json. Non-zero exit on any contract violation: this is
+a hard CI gate (scripts/ci.sh), the machine check that the plan XLA
+compiled is the plan the cost model priced (DESIGN.md §11).
+
+Sections:
+  operators — phj/smj/nphj joins (both materialization patterns), all five
+              group-by strategies, the fused group-join, and the
+              permutation planners (sort-free radix vs XLA reference);
+  kernels   — static VMEM fit / grid-aliasing / scatter-discipline lint
+              over every kernel in src/repro/kernels;
+  engine    — optimizer-chosen physical plans (star, filtered top-k,
+              fusible group-join), audited node by node via
+              executor.audit, across the chooser's branches.
+
+Usage: python -m repro.analysis [--out ANALYSIS.json]
+"""
+from __future__ import annotations
+
+import functools
+import json
+import sys
+
+import numpy as np
+
+from . import contracts as C
+from .jaxpr_audit import audit_fn
+from .kernel_lint import lint_production_kernels
+
+
+def _operator_entries():
+    """(name, fn, args, contract) for every core operator entry point,
+    at trace-friendly shapes (tracing is shape-polymorphic in cost: these
+    budgets are the budgets at any scale; pass counts are pinned by the
+    same static bit-widths the planner uses)."""
+    import jax.numpy as jnp
+
+    from repro.core import (Table, group_aggregate, join, phj_groupjoin,
+                            primitives as prim)
+
+    rng = np.random.default_rng(0)
+    n_r, n_s, n_groups = 512, 2048, 64
+    R = Table({"k": jnp.asarray(rng.permutation(n_r).astype(np.int32)),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(rng.integers(0, n_r, n_s).astype(np.int32)),
+               "g": jnp.asarray(
+                   rng.integers(0, n_groups, n_s).astype(np.int32)),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    G = Table({"k": S["g"], "v": jnp.asarray(
+        rng.normal(size=n_s).astype(np.float32))})
+    keys = S["k"]
+    digits = jnp.asarray(rng.integers(0, 16, n_s).astype(np.int32))
+    aggs = {"v": "sum"}
+
+    entries = []
+    for alg in ("phj", "smj", "nphj"):
+        for pattern in ("gftr", "gfur"):
+            if alg == "nphj" and pattern == "gfur":
+                continue  # nphj has a single materialization pattern
+            fn = functools.partial(join, key="k", algorithm=alg,
+                                   pattern=pattern, out_size=n_s,
+                                   mode="pk_fk")
+            entries.append((f"join/{alg}/{pattern}/pk_fk", fn, (R, S),
+                            C.join_contract(alg, pattern)))
+    entries.append((
+        "join/phj/gftr/mn",
+        functools.partial(join, key="k", algorithm="phj", pattern="gftr",
+                          out_size=2 * n_s, mode="mn"),
+        (R, S), C.join_contract("phj", "gftr")))
+
+    for strategy in ("sort", "partition", "partition_hash", "scatter",
+                     "sort_pallas"):
+        fn = functools.partial(group_aggregate, key="k", aggs=aggs,
+                               num_groups=2 * n_groups, strategy=strategy)
+        entries.append((f"groupby/{strategy}", fn, (G,),
+                        C.groupby_contract(strategy, len(aggs))))
+
+    for strategy in ("sort", "scatter"):
+        fn = functools.partial(phj_groupjoin, key="k", group_key="g",
+                               aggs={"rv": "sum", "sv": "mean"},
+                               num_groups=2 * n_groups,
+                               agg_strategy=strategy)
+        entries.append((f"groupjoin/phj+{strategy}", fn, (R, S),
+                        C.groupjoin_contract(strategy, 2)))
+
+    entries.append((
+        "primitives/partition_plan/pallas",
+        functools.partial(prim.plan_partition_permutation, num_partitions=16,
+                          impl="pallas"),
+        (digits,), C.partition_plan_contract("pallas")))
+    entries.append((
+        "primitives/sort_plan/radix",
+        functools.partial(prim.plan_sort_permutation, impl="radix"),
+        (keys,),
+        C.OperatorContract(name="sort_plan[radix]", max_sorts=0,
+                           max_float_scatter_adds=0)))
+    entries.append((
+        "primitives/sort_plan/xla",
+        functools.partial(prim.plan_sort_permutation, impl="xla"),
+        (keys,),
+        C.OperatorContract(name="sort_plan[xla]", max_sorts=1,
+                           max_float_scatter_adds=0)))
+    return entries
+
+
+def _engine_plans():
+    """Optimizer-chosen plans across the chooser's branches: a star query
+    (join choice), a filtered top-k (filter + order-by), and a fusible
+    join + group-by both as chosen and with fusion forced off."""
+    import jax.numpy as jnp
+
+    from repro.core import Table
+    from repro.engine import Catalog, optimize, scan
+
+    rng = np.random.default_rng(1)
+    n_r, n_s = 512, 4096
+    R = Table({"k": jnp.asarray(rng.permutation(n_r).astype(np.int32)),
+               "rv": jnp.asarray(rng.integers(0, 100, n_r).astype(np.int32))})
+    S = Table({"k": jnp.asarray(rng.integers(0, n_r, n_s).astype(np.int32)),
+               "g": jnp.asarray(rng.integers(0, 64, n_s).astype(np.int32)),
+               "sv": jnp.asarray(rng.integers(0, 100, n_s).astype(np.int32))})
+    cat = Catalog({"R": R, "S": S})
+
+    plans = []
+    q = scan("S").join(scan("R"), key="k").group_by("g", rv="sum", sv="mean")
+    plans.append(("engine/join_groupby", optimize(q, cat,
+                                                  measure_profile=False)))
+    plans.append(("engine/forced_unfused",
+                  optimize(q, cat, measure_profile=False,
+                           force_join=("phj", "gftr"))))
+    q2 = (scan("S").filter("sv", ">", 50).join(scan("R"), key="k")
+          .group_by("g", sv="sum")
+          .order_by("sv_sum", limit=8, descending=True))
+    plans.append(("engine/filtered_topk", optimize(q2, cat,
+                                                   measure_profile=False)))
+    return plans
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    out_path = "ANALYSIS.json"
+    if "--out" in argv:
+        out_path = argv[argv.index("--out") + 1]
+
+    report = {"operators": {}, "kernels": {}, "engine": {}}
+    n_violations = 0
+
+    print("== operators ==")
+    for name, fn, args, contract in _operator_entries():
+        rep = audit_fn(fn, *args)
+        violations = C.check(contract, rep)
+        n_violations += len(violations)
+        status = "VIOLATION" if violations else "ok"
+        print(f"{name}: compiled[{rep.budget.describe() or 'none'}] "
+              f"priced[{contract.describe()}] "
+              f"peak-live={rep.peak_live_bytes/1024:.0f}KiB {status}")
+        entry = rep.as_dict()
+        entry["contract"] = contract.describe()
+        entry["violations"] = [f"{type(v).__name__}: {v}"
+                               for v in violations]
+        report["operators"][name] = entry
+
+    print("== kernels ==")
+    for krep in lint_production_kernels():
+        n_violations += len(krep.violations)
+        status = "VIOLATION" if krep.violations else "ok"
+        print(f"{krep.name}: grid={krep.grid} "
+              f"vmem={krep.vmem_bytes/1024:.0f}KiB/"
+              f"{krep.vmem_budget/1024:.0f}KiB "
+              f"revisits={krep.aliased_output_blocks} {status}")
+        report["kernels"][krep.name] = krep.as_dict()
+
+    print("== engine ==")
+    from repro.engine import executor
+
+    for name, plan in _engine_plans():
+        plan_audit = executor.audit(plan)
+        n_violations += len(plan_audit.violations)
+        status = "VIOLATION" if plan_audit.violations else "ok"
+        root = plan_audit.root_report
+        print(f"{name}: compiled[{root.budget.describe() or 'none'}] "
+              f"peak-live={root.peak_live_bytes/1024:.0f}KiB "
+              f"nodes={len(plan_audit.entries)} {status}")
+        report["engine"][name] = plan_audit.as_dict()
+
+    report["summary"] = {"violations": n_violations}
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {out_path}: {n_violations} violation(s)")
+    return 1 if n_violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

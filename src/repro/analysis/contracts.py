@@ -1,0 +1,218 @@
+"""Operator contracts: what each physical operator promises the compiler
+will (not) do, in the same primitive vocabulary the cost model prices.
+
+A contract is the *priced* side of priced-vs-compiled (DESIGN.md §11):
+the planner charged PHJ zero sort passes, so a compiled PHJ plan
+containing a `sort` primitive is a plan the model mis-priced — the
+chooser's Figure-18 decisions stop being trustworthy the moment that
+drifts. `check()` compares an `AuditReport` (the compiled side, from
+`jaxpr_audit`) against a contract and returns typed violations;
+`enforce()` raises the first one.
+
+The materialization contract is expressed through the liveness watermark:
+a fused group-join's peak-live-bytes must stay a small multiple of its
+input+output bytes, *independent of the join-output capacity* — that is
+the checkable form of "the joined row never exists" (PR 4's claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .jaxpr_audit import AuditReport, PrimitiveBudget
+
+
+class ContractViolation(Exception):
+    """A compiled plan diverged from the contract the cost model priced."""
+
+
+class SortBudgetViolation(ContractViolation):
+    """More sort primitives than the priced plan allows (e.g. a 'sort-free'
+    partition pipeline silently compiled through the sort-based arm)."""
+
+
+class MaterializationViolation(ContractViolation):
+    """Peak live bytes exceed the contract bound — something the fusion
+    promised never to materialize got materialized."""
+
+
+class DtypePromotionViolation(ContractViolation):
+    """An eqn silently widened to a 64-bit dtype none of its inputs had."""
+
+
+class FloatScatterViolation(ContractViolation):
+    """Float scatter-add outside the approved segmented-sum accumulators
+    (non-deterministic on parallel backends; the CUDA-atomics hazard)."""
+
+
+class VmemBudgetViolation(ContractViolation):
+    """A Pallas kernel's blocks don't fit the per-backend VMEM budget."""
+
+
+class GridAliasViolation(ContractViolation):
+    """Two grid steps map to the same output block without the kernel
+    declaring sequential-accumulation semantics."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorContract:
+    """Budget bounds one operator promises. `None` means unconstrained."""
+    name: str
+    max_sorts: int | None = None
+    max_float_scatter_adds: int | None = None
+    forbid_64bit_promotion: bool = True
+    # peak_live_bytes <= live_multiplier * (arg_bytes + out_bytes) + slack
+    live_multiplier: float | None = None
+    live_slack_bytes: int = 1 << 20
+
+    def describe(self) -> str:
+        parts = []
+        if self.max_sorts is not None:
+            parts.append(f"sorts<={self.max_sorts}")
+        if self.max_float_scatter_adds is not None:
+            parts.append(f"f32-scatter-adds<={self.max_float_scatter_adds}")
+        if self.live_multiplier is not None:
+            parts.append(f"peak-live<={self.live_multiplier:g}x(in+out)")
+        if self.forbid_64bit_promotion:
+            parts.append("no-64bit-promotion")
+        return " ".join(parts) if parts else "unconstrained"
+
+
+def check(contract: OperatorContract, report: AuditReport,
+          budget: PrimitiveBudget | None = None) -> list[ContractViolation]:
+    """Judge a compiled program against its contract. `budget` overrides
+    the report's (the executor passes per-node incremental budgets so a
+    parent isn't charged for its children's primitives)."""
+    budget = report.budget if budget is None else budget
+    out: list[ContractViolation] = []
+    if contract.max_sorts is not None and budget.sorts > contract.max_sorts:
+        out.append(SortBudgetViolation(
+            f"{contract.name}: compiled plan contains {budget.sorts} sort "
+            f"primitive(s); the priced contract allows "
+            f"{contract.max_sorts}"))
+    if (contract.max_float_scatter_adds is not None
+            and budget.float_scatter_adds > contract.max_float_scatter_adds):
+        out.append(FloatScatterViolation(
+            f"{contract.name}: {budget.float_scatter_adds} float "
+            f"scatter-add(s) vs allowed {contract.max_float_scatter_adds} "
+            f"(approved segmented-sum accumulators only)"))
+    if contract.forbid_64bit_promotion and report.promotions:
+        out.append(DtypePromotionViolation(
+            f"{contract.name}: silent 64-bit promotion at "
+            f"{'; '.join(report.promotions[:3])}"))
+    if contract.live_multiplier is not None:
+        bound = (contract.live_multiplier
+                 * (report.arg_bytes + report.out_bytes)
+                 + contract.live_slack_bytes)
+        if report.peak_live_bytes > bound:
+            out.append(MaterializationViolation(
+                f"{contract.name}: peak live bytes "
+                f"{report.peak_live_bytes} (at {report.peak_live_at}) "
+                f"exceed {bound:.0f} = {contract.live_multiplier:g}x"
+                f"(in={report.arg_bytes} + out={report.out_bytes}) + "
+                f"{contract.live_slack_bytes} slack — a promised-away "
+                f"materialization happened"))
+    return out
+
+
+def enforce(contract: OperatorContract, report: AuditReport,
+            budget: PrimitiveBudget | None = None) -> None:
+    violations = check(contract, report, budget)
+    if violations:
+        raise violations[0]
+
+
+# ---------------------------------------------------------------------------
+# per-operator contract registry (the priced budgets)
+# ---------------------------------------------------------------------------
+# Sort budget per group-by strategy. 'sort' pays exactly one sort;
+# 'partition' pays one block-local sort after the sort-free radix planner;
+# 'partition_hash' re-sorts once per side (plan + combine); 'scatter' is
+# sort-free; 'sort_pallas' pays one plan sort plus one combine sort per
+# segmented-sum call (hoisted count + one per aggregate column).
+GROUPBY_SORTS = {"sort": 1, "partition": 1, "partition_hash": 2, "scatter": 0}
+
+
+def groupby_contract(strategy: str, n_aggs: int) -> OperatorContract:
+    if strategy == "sort_pallas":
+        max_sorts = 2 + n_aggs
+    else:
+        max_sorts = GROUPBY_SORTS.get(strategy, 2)
+    # one float accumulator pass per aggregate (+1: mean's count/sum pair)
+    return OperatorContract(name=f"groupby[{strategy}]", max_sorts=max_sorts,
+                            max_float_scatter_adds=2 * n_aggs + 1)
+
+
+JOIN_SORTS = {"phj": 0, "nphj": 0, "smj": 2}
+
+
+def join_contract(algorithm: str, pattern: str = "gftr") -> OperatorContract:
+    # joins move payloads with gathers/plain scatters; a float scatter-add
+    # in a join is always a drifted accumulator
+    return OperatorContract(name=f"join[{algorithm}/{pattern}]",
+                            max_sorts=JOIN_SORTS.get(algorithm, 0),
+                            max_float_scatter_adds=0)
+
+
+GROUPJOIN_LIVE_MULTIPLIER = 512.0
+GROUPJOIN_LIVE_SLACK = 8 << 20
+
+
+def groupjoin_contract(agg_strategy: str, n_aggs: int,
+                       live_multiplier: float | None = GROUPJOIN_LIVE_MULTIPLIER,
+                       ) -> OperatorContract:
+    """Fused probe+accumulate: PHJ partitioning is sort-free, so the only
+    sorts are the accumulator's own; and the join output must never
+    materialize — peak live bytes stay bounded by the inputs, independent
+    of the join cardinality. The bound is deliberately loose (512x + 8MiB
+    slack): the CPU reference probe's candidate matrix (n_pad x capR int32,
+    priced by the model and join-capacity-independent) dominates residency
+    at audit scale, so a tight multiple of in+out would flag the probe
+    itself. What the bound still pins is the *asymptotic* claim — any plan
+    that materializes a join output at fanout beyond ~512x its input blows
+    through it, while the fused path stays constant no matter the join
+    cardinality."""
+    base = groupby_contract(agg_strategy, n_aggs)
+    return OperatorContract(name=f"groupjoin[phj+{agg_strategy}]",
+                            max_sorts=base.max_sorts,
+                            max_float_scatter_adds=base.max_float_scatter_adds,
+                            live_multiplier=live_multiplier,
+                            live_slack_bytes=GROUPJOIN_LIVE_SLACK)
+
+
+def orderby_contract() -> OperatorContract:
+    return OperatorContract(name="order_by_limit", max_sorts=1,
+                            max_float_scatter_adds=0)
+
+
+def passthrough_contract(name: str) -> OperatorContract:
+    """Scan/filter/project: no sorts, no float accumulation."""
+    return OperatorContract(name=name, max_sorts=0, max_float_scatter_adds=0)
+
+
+def partition_plan_contract(impl: str = "pallas") -> OperatorContract:
+    """The radix partition planner itself: the 'pallas' rank pipeline is
+    sort-free (PR 5's claim); the 'xla' reference arm pays one stable sort
+    per pass and is priced accordingly."""
+    return OperatorContract(name=f"partition_plan[{impl}]",
+                            max_sorts=0 if impl == "pallas" else None,
+                            max_float_scatter_adds=0)
+
+
+def contract_for_node(node) -> OperatorContract:
+    """Map an engine physical node to its priced contract."""
+    from repro.engine import physical as P
+    if isinstance(node, P.PJoin):
+        return join_contract(node.algorithm, node.pattern)
+    if isinstance(node, P.PGroupBy):
+        return groupby_contract(node.strategy, len(node.aggs))
+    if isinstance(node, P.PGroupJoin):
+        return groupjoin_contract(node.agg_strategy, len(node.aggs))
+    if isinstance(node, P.POrderByLimit):
+        return orderby_contract()
+    if isinstance(node, P.PScan):
+        return passthrough_contract("scan")
+    if isinstance(node, P.PFilter):
+        return passthrough_contract("filter")
+    if isinstance(node, P.PProject):
+        return passthrough_contract("project")
+    return OperatorContract(name=type(node).__name__)

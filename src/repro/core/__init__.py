@@ -2,24 +2,21 @@
 grouped aggregations with GFTR-optimized materialization, as a composable
 JAX library (see DESIGN.md)."""
 
-from .table import Table, table_from_dict, concat_tables, KEY_SENTINEL
-from .join import join, join_sequence, by_name, ALGORITHMS, PATTERNS
-from .sort_merge import smj_join, merge_find_pk_fk, merge_find_mn
-from .hash_join import (phj_join, phj_join_checked, phj_overflowed, hash32,
-                        choose_partition_bits)
-from .nphj import nphj_join
-from .groupby import (group_aggregate, groupby_sort, groupby_partition,
-                      groupby_partition_checked, groupby_partition_overflowed,
-                      groupby_partition_hash, groupby_scatter,
-                      groupby_sort_pallas, choose_groupby_strategy,
-                      choose_groupby_partition_bits)
-from .groupjoin import (phj_groupjoin, groupjoin_checked,
-                        groupjoin_overflowed, groupjoin_required_groups)
-from .planner import (JoinStats, choose_algorithm, choose_smj_pattern,
-                      PrimitiveProfile, predict_join_time,
-                      predict_groupby_time, predict_groupjoin_time)
-from .memmodel import peak_memory, peak_memory_bytes, gfur_ledger, gftr_ledger
 from . import primitives
+from .groupby import (choose_groupby_partition_bits, choose_groupby_strategy, group_aggregate,
+                      groupby_partition, groupby_partition_checked, groupby_partition_hash,
+                      groupby_partition_overflowed, groupby_scatter, groupby_sort,
+                      groupby_sort_pallas)
+from .groupjoin import (groupjoin_checked, groupjoin_overflowed, groupjoin_required_groups,
+                        phj_groupjoin)
+from .hash_join import choose_partition_bits, hash32, phj_join, phj_join_checked, phj_overflowed
+from .join import ALGORITHMS, PATTERNS, by_name, join, join_sequence
+from .memmodel import gftr_ledger, gfur_ledger, peak_memory, peak_memory_bytes
+from .nphj import nphj_join
+from .planner import (JoinStats, PrimitiveProfile, choose_algorithm, choose_smj_pattern,
+                      predict_groupby_time, predict_groupjoin_time, predict_join_time)
+from .sort_merge import merge_find_mn, merge_find_pk_fk, smj_join
+from .table import KEY_SENTINEL, Table, concat_tables, table_from_dict
 
 __all__ = [
     "Table", "table_from_dict", "concat_tables", "KEY_SENTINEL",

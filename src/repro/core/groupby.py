@@ -36,9 +36,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table import KEY_SENTINEL, Table
-from .hash_join import hash32
 from . import primitives as prim
+from .hash_join import hash32
+from .table import KEY_SENTINEL, Table
 
 AGG_OPS = ("sum", "count", "min", "max", "mean")
 
@@ -168,7 +168,8 @@ def _tile_partials(keys, cols_ops, block):
         elif pop == "count":
             acc = pcounts
         elif pop in ("min", "max"):
-            fill = jnp.float32(jnp.finfo(jnp.float32).max if pop == "min" else jnp.finfo(jnp.float32).min)
+            fill = jnp.float32(jnp.finfo(jnp.float32).max if pop == "min"
+                               else jnp.finfo(jnp.float32).min)
             masked = jnp.where(oh > 0, vs[:, :, None], fill)
             acc = masked.min(axis=1) if pop == "min" else masked.max(axis=1)
         else:
@@ -217,7 +218,8 @@ def groupby_partition_hash(
     for (name, (_, pop)), sv in zip(cols_ops.items(), svals):
         _, cop = _PARTIAL[{"sum": "sum", "count": "count", "min": "min", "max": "max"}[pop]]
         if cop == "sum":
-            acc = jax.ops.segment_sum(jnp.where(valid_row, sv, 0.0), gid, num_segments=num_groups + 1)
+            acc = jax.ops.segment_sum(jnp.where(valid_row, sv, 0.0), gid,
+                                      num_segments=num_groups + 1)
         elif cop == "min":
             acc = jax.ops.segment_min(jnp.where(valid_row, sv, jnp.finfo(jnp.float32).max),
                                       gid, num_segments=num_groups + 1)

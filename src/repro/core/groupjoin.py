@@ -50,12 +50,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table import KEY_SENTINEL, Table
 from . import primitives as prim
 from .groupby import AGG_OPS, group_aggregate
-from .hash_join import (BUILD_BLOCK, blocked_partitions, build_blocks,
-                        choose_partition_bits, _digits,
-                        escalate_partition_bits, phj_overflowed, probe_pk_fk)
+from .hash_join import (BUILD_BLOCK, _digits, blocked_partitions, build_blocks,
+                        choose_partition_bits, escalate_partition_bits, phj_overflowed,
+                        probe_pk_fk)
+from .table import KEY_SENTINEL, Table
 
 
 def _value_blocks(vals_part: jax.Array, off: jax.Array, sz: jax.Array,

@@ -23,13 +23,11 @@ sub-partitioning load-balance trick, for free).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from .table import KEY_SENTINEL, Table
 from . import primitives as prim
+from .table import KEY_SENTINEL, Table
 
 
 def hash32(x: jax.Array) -> jax.Array:

@@ -14,11 +14,11 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .table import Table
 from . import primitives as prim
-from .sort_merge import smj_join
 from .hash_join import phj_join
 from .nphj import nphj_join
+from .sort_merge import smj_join
+from .table import Table
 
 ALGORITHMS = ("smj", "phj", "nphj")
 PATTERNS = ("gftr", "gfur")

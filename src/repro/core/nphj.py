@@ -16,9 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table import KEY_SENTINEL, Table
 from . import primitives as prim
 from .hash_join import hash32
+from .table import KEY_SENTINEL, Table
 
 _EMPTY = jnp.int32(-1)
 

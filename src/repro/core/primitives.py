@@ -20,7 +20,6 @@ All primitives are shape-polymorphic pure functions safe under jit/vmap.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -126,7 +125,7 @@ def plan_partition_permutation(digits: jax.Array, num_partitions: int, *,
     phase reads immediately (e.g. the group key)."""
     from repro.kernels import ops as kops
 
-    impl = kops.PARTITION_PLAN_IMPL if impl is None else impl
+    impl = kops.partition_plan_impl() if impl is None else impl
     perm, carried, offsets, sizes = kops.partition_plan(
         digits, num_partitions, carry=carry, max_pass_bits=max_pass_bits,
         impl=impl)

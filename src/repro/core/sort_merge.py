@@ -17,8 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .table import KEY_SENTINEL, Table
 from . import primitives as prim
+from .table import KEY_SENTINEL, Table
 
 
 # ---------------------------------------------------------------------------

@@ -18,11 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Table, join_sequence, group_aggregate
+from repro.core import Table, group_aggregate, join_sequence
 
 
 @dataclasses.dataclass(frozen=True)

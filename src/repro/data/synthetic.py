@@ -7,9 +7,6 @@ learnable structure (loss drops measurably within tens of steps — used by
 the e2e tests)."""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 

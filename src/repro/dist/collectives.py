@@ -16,8 +16,8 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from .sharding import _mesh_axis_size

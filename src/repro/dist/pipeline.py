@@ -13,8 +13,8 @@ transformer blocks.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 

@@ -27,13 +27,12 @@ Typical use::
     print(plan.explain())            # per-op algorithm/pattern + cost
     result, count = plan.run()       # executes under jax.jit
 """
-from .logical import (Plan, Scan, Filter, Project, Join, GroupBy,
-                      OrderByLimit, scan, output_columns)
-from .stats import (Catalog, ColumnStats, TableStats, collect_table_stats,
-                    estimate_distinct, estimate_match_ratio, estimate_zipf,
-                    estimate_selectivity, synthesize_join_stats)
-from .physical import (Optimizer, PhysicalPlan, optimize, calibrated_profile)
 from .executor import execute, run
+from .logical import Filter, GroupBy, Join, OrderByLimit, Plan, Project, Scan, output_columns, scan
+from .physical import Optimizer, PhysicalPlan, calibrated_profile, optimize
+from .stats import (Catalog, ColumnStats, TableStats, collect_table_stats, estimate_distinct,
+                    estimate_match_ratio, estimate_selectivity, estimate_zipf,
+                    synthesize_join_stats)
 
 __all__ = [
     "Plan", "Scan", "Filter", "Project", "Join", "GroupBy", "OrderByLimit",

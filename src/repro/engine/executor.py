@@ -15,6 +15,7 @@ clustering GFTR relies on (`primitives.compact` is stable).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Mapping
 
 import jax
@@ -142,6 +143,96 @@ def _order_by(node: P.POrderByLimit, tables):
     # gather, not a full-table copy of every column
     out = t.take(perm[:node.capacity])
     return out, jnp.minimum(count, node.capacity)
+
+
+# ---------------------------------------------------------------------------
+# contract audit: the compiled side of priced-vs-compiled (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class NodeAudit:
+    """One physical node judged against its priced contract. `own_budget`
+    is the node's incremental primitive budget: its subtree's trace minus
+    its children's subtree traces, so a join is never charged for the sort
+    its order-by child pays."""
+    node: P.PhysNode
+    contract: object  # analysis.OperatorContract
+    report: object  # analysis.AuditReport of the node's SUBTREE
+    own_budget: object  # analysis.PrimitiveBudget of the node alone
+    violations: list
+
+
+@dataclasses.dataclass
+class PlanAudit:
+    entries: list  # NodeAudit, preorder from the root
+    root_report: object  # whole-plan AuditReport
+
+    @property
+    def violations(self) -> list:
+        return [v for e in self.entries for v in e.violations]
+
+    def by_node(self) -> dict:
+        return {id(e.node): e for e in self.entries}
+
+    def as_dict(self) -> dict:
+        return {
+            "peak_live_bytes": self.root_report.peak_live_bytes,
+            "budget": self.root_report.budget.as_dict(),
+            "nodes": [{
+                "node": type(e.node).__name__,
+                "contract": e.contract.describe(),
+                "compiled": e.own_budget.as_dict(),
+                "violations": [f"{type(v).__name__}: {v}"
+                               for v in e.violations],
+            } for e in self.entries],
+        }
+
+
+def _scan_names(node: P.PhysNode) -> set:
+    if isinstance(node, P.PScan):
+        return {node.table}
+    names: set = set()
+    for child in node.children():
+        names |= _scan_names(child)
+    return names
+
+
+def audit(plan: "P.PhysicalPlan",
+          tables: Mapping[str, Table] | None = None) -> PlanAudit:
+    """Trace every plan subtree, attribute each node's incremental
+    primitive budget, and judge it against the node's declared contract
+    (`analysis.contracts.contract_for_node`). The subtree traces use only
+    the tables that subtree scans, so the liveness watermark of a fused
+    group-join reflects *its* inputs — the checkable form of 'the join
+    output never materialized'."""
+    from repro.analysis import contracts as C
+    from repro.analysis import jaxpr_audit as A
+
+    tables = dict(tables if tables is not None else plan.catalog.tables)
+    reports: dict = {}
+
+    def trace(node: P.PhysNode):
+        sub = {n: tables[n] for n in sorted(_scan_names(node))}
+        closed = jax.make_jaxpr(lambda tb: execute(node, tb))(sub)
+        return A.audit_jaxpr(closed)
+
+    entries: list[NodeAudit] = []
+
+    def visit(node: P.PhysNode):
+        rep = trace(node)
+        reports[id(node)] = rep
+        contract = C.contract_for_node(node)
+        entry = NodeAudit(node=node, contract=contract, report=rep,
+                          own_budget=None, violations=[])
+        entries.append(entry)  # preorder: parent precedes children
+        own = rep.budget
+        for child in node.children():
+            visit(child)
+            own = own - reports[id(child)].budget
+        entry.own_budget = own
+        entry.violations = C.check(contract, rep, own)
+
+    visit(plan.root)
+    return PlanAudit(entries=entries, root_report=reports[id(plan.root)])
 
 
 def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,

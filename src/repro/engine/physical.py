@@ -37,9 +37,8 @@ import numpy as np
 
 from repro.core.groupby import PARTITION_ROW_BLOCK, choose_groupby_strategy
 from repro.core.hash_join import BUILD_BLOCK
-from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm,
-                                choose_smj_pattern, predict_groupby_time,
-                                predict_groupjoin_time, predict_join_time)
+from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm, choose_smj_pattern,
+                                predict_groupby_time, predict_groupjoin_time, predict_join_time)
 
 from . import logical as L
 from . import stats as S
@@ -256,14 +255,35 @@ class PhysicalPlan:
     total_cost: float
     compiled: object = dataclasses.field(default=None, repr=False, compare=False)
 
-    def explain(self) -> str:
+    def explain(self, verify: bool = False, tables: Mapping | None = None) -> str:
+        """Render the plan tree. With `verify=True`, trace every subtree,
+        print each node's priced contract next to its compiled primitive
+        budget (DESIGN.md §11), and raise the first
+        `analysis.ContractViolation` if any compiled budget diverges from
+        what the cost model priced — the rendered plan rides along in the
+        exception message."""
         lines = [f"physical plan  predicted_total={self.total_cost*1e6:.0f}us"]
+        plan_audit = None
+        if verify:
+            from . import executor
+
+            plan_audit = executor.audit(self, tables)
+        by_node = plan_audit.by_node() if plan_audit else {}
 
         def walk(node, prefix, is_last, label=""):
             branch = "└─ " if is_last else "├─ "
             lab = f"{label}: " if label else ""
             lines.append(prefix + branch + lab + node.describe())
             ext = "   " if is_last else "│  "
+            entry = by_node.get(id(node))
+            if entry is not None:
+                compiled = entry.own_budget.describe() or "none"
+                status = "DIVERGED" if entry.violations else "ok"
+                lines.append(
+                    f"{prefix}{ext}     priced[{entry.contract.describe()}] "
+                    f"compiled[{compiled}] "
+                    f"peak-live={entry.report.peak_live_bytes/1024:.0f}KiB "
+                    f"{status}")
             kids = node.children()
             labels = (
                 ("build", "probe") if isinstance(node, (PJoin, PGroupJoin))
@@ -273,7 +293,11 @@ class PhysicalPlan:
                 walk(k, prefix + ext, i == len(kids) - 1, klab)
 
         walk(self.root, "", True)
-        return "\n".join(lines)
+        rendered = "\n".join(lines)
+        if plan_audit is not None and plan_audit.violations:
+            first = plan_audit.violations[0]
+            raise type(first)(f"{first}\n{rendered}")
+        return rendered
 
     def run(self, tables: Mapping | None = None, *, jit: bool = True):
         """Execute over `tables` (default: the catalog's). Returns

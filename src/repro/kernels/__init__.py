@@ -11,10 +11,21 @@ REPRO_PALLAS_INTERPRET; see DESIGN.md §2/§10 for the CUDA->TPU mapping):
   segsum           - grouped-aggregation tile partials (scatter-free MXU)
 """
 from . import ops, ref
+from .gather import gather_windowed_pallas
+from .hash_probe import hash_probe_pallas, layout_probe_blocks
 from .histogram import histogram_pallas
+from .merge_join import lower_bound_windowed_pallas
 from .radix_partition import (block_histograms_pallas, partition_plan_pallas,
                               partition_ranks_pallas, sort_plan_radix)
-from .merge_join import lower_bound_windowed_pallas
-from .hash_probe import hash_probe_pallas, layout_probe_blocks
-from .gather import gather_windowed_pallas
 from .segsum import segsum_partials_pallas
+
+__all__ = [
+    "ops", "ref",
+    "histogram_pallas",
+    "block_histograms_pallas", "partition_plan_pallas",
+    "partition_ranks_pallas", "sort_plan_radix",
+    "lower_bound_windowed_pallas",
+    "hash_probe_pallas", "layout_probe_blocks",
+    "gather_windowed_pallas",
+    "segsum_partials_pallas",
+]

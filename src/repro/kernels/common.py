@@ -29,15 +29,29 @@ SUBLANES = 8
 PAD_DIGIT = -1
 
 
+_INTERPRET_TRUE = ("1", "true", "yes", "on")
+_INTERPRET_FALSE = ("0", "false", "no", "off")
+
+
 def default_interpret() -> bool:
     """Pallas execution mode: compiled kernels on TPU, interpret elsewhere.
 
-    REPRO_PALLAS_INTERPRET=1/0 (also true/false/yes/no/on/off) overrides the
+    REPRO_PALLAS_INTERPRET=1/0 (also true/false/yes/on/off...) overrides the
     backend detection — e.g. force interpret on a TPU host while debugging,
-    or force compilation off-TPU to surface lowering errors."""
+    or force compilation off-TPU to surface lowering errors. Unknown values
+    raise instead of silently picking a mode: a typo'd override must not
+    flip which compiler ran the kernels."""
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
-        return env.strip().lower() not in ("0", "false", "no", "off")
+        val = env.strip().lower()
+        if val in _INTERPRET_TRUE:
+            return True
+        if val in _INTERPRET_FALSE:
+            return False
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r} is not a recognized value; "
+            f"allowed: {'/'.join(_INTERPRET_TRUE)} (interpret) or "
+            f"{'/'.join(_INTERPRET_FALSE)} (compiled)")
     try:
         return jax.default_backend() != "tpu"
     except Exception:  # pragma: no cover - no backend at all

@@ -17,9 +17,9 @@ partition offset (for virtual-ID construction) rides along in SMEM.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 from .common import resolve_interpret
 

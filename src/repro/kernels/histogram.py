@@ -15,11 +15,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
-from .common import (LANES, ceil_div, digit_lane_blocks, digit_onehot,
-                     resolve_interpret)
+from .common import LANES, digit_lane_blocks, digit_onehot, resolve_interpret
 
 
 def _hist_kernel(num_bins: int, x_ref, o_ref):

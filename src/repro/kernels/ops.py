@@ -12,27 +12,41 @@ import time.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ref
 from .common import ceil_div
-from .histogram import histogram_pallas
-from .radix_partition import (block_histograms_pallas, partition_plan_pallas,
-                              partition_ranks_pallas, sort_plan_radix)
-from .merge_join import lower_bound_windowed_pallas
-from .hash_probe import hash_probe_pallas, layout_probe_blocks, probe_agg_pallas
 from .gather import gather_windowed_pallas
+from .hash_probe import hash_probe_pallas, layout_probe_blocks, probe_agg_pallas
+from .histogram import histogram_pallas
+from .merge_join import lower_bound_windowed_pallas
+from .radix_partition import partition_plan_pallas, partition_ranks_pallas, sort_plan_radix
 from .segsum import segsum_partials_pallas
 
 # Production arm of the partition planner (core.primitives resolves its
 # impl=None through this): 'pallas' = the sort-free histogram/rank pipeline,
-# 'xla' = the stable-sort reference. Env knob for A/B and bisection.
-PARTITION_PLAN_IMPL = os.environ.get("REPRO_PARTITION_PLAN_IMPL", "pallas")
+# 'xla' = the stable-sort reference. Env knob for A/B and bisection; read
+# and validated per call (never frozen at import), so an unknown value
+# raises instead of silently running an arm the cost model never priced.
+PARTITION_PLAN_IMPLS = ("pallas", "xla")
+
+
+def partition_plan_impl() -> str:
+    env = os.environ.get("REPRO_PARTITION_PLAN_IMPL", "pallas")
+    if env not in PARTITION_PLAN_IMPLS:
+        raise ValueError(
+            f"REPRO_PARTITION_PLAN_IMPL={env!r} is not a recognized value; "
+            f"allowed: {'/'.join(PARTITION_PLAN_IMPLS)}")
+    return env
+
+
+def __getattr__(name):  # keep the old constant's spelling working
+    if name == "PARTITION_PLAN_IMPL":
+        return partition_plan_impl()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 KEY_SENTINEL = -1
 

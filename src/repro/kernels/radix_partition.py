@@ -34,11 +34,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
-from .common import (LANES, ceil_div, digit_lane_blocks, digit_onehot,
-                     resolve_interpret)
+from .common import LANES, ceil_div, digit_lane_blocks, digit_onehot, resolve_interpret
 
 
 def _block_hist_kernel(num_bins: int, x_ref, o_ref):

@@ -11,8 +11,8 @@ collapse tile-locally first, which is how skew is absorbed.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 from .common import ceil_div, combine_u32_hi_lo, resolve_interpret, split_u32_hi_lo
 

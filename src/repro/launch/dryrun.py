@@ -28,8 +28,8 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (SHAPES, ArchConfig, ShapeSpec, cell_is_runnable,
-                                get_config, list_archs)
+from repro.configs.base import (SHAPES, cell_is_runnable, get_config,
+                                list_archs)
 from repro.dist import sharding as SH
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh, mesh_chips

@@ -19,7 +19,8 @@ def fmt_bytes(b):
 
 
 def dryrun_table(recs, mesh_tag: str) -> str:
-    rows = ["| arch | shape | status | live GB/dev | fits 16GB | compile s | collectives (AG/AR/RS/A2A/CP) |",
+    rows = ["| arch | shape | status | live GB/dev | fits 16GB | compile s"
+            " | collectives (AG/AR/RS/A2A/CP) |",
             "|---|---|---|---|---|---|---|"]
     for tag in sorted(recs):
         r = recs[tag]
@@ -45,7 +46,9 @@ def dryrun_table(recs, mesh_tag: str) -> str:
 
 
 def roofline_table(recs) -> str:
-    rows = ["| arch | shape | compute s | memory s | collective s | dominant | bound frac (compute/bound) | MODEL/HLO flops | coll bytes/dev GB |",
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant"
+            " | bound frac (compute/bound) | MODEL/HLO flops"
+            " | coll bytes/dev GB |",
             "|---|---|---|---|---|---|---|---|---|"]
     for tag in sorted(recs):
         r = recs[tag]

@@ -11,15 +11,12 @@ import argparse
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config, get_reduced_config, list_archs
 from repro.data.synthetic import make_batch_fn
-from repro.dist import sharding as SH
 from repro.models import model as M
-from repro.train.optimizer import AdamW, cosine_schedule
 from repro.train.loop import LoopConfig, train_loop
-from repro.train import step as STEP
+from repro.train.optimizer import AdamW, cosine_schedule
 
 
 def main(argv=None):

@@ -16,8 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .params import P
 from repro.dist.sharding import shard_act
+
+from .params import P
 
 
 # ---------------------------------------------------------------------------

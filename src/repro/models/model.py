@@ -17,18 +17,18 @@ structure.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeSpec
+
 from . import layers as L
 from . import moe as MOE
 from . import ssm as SSM
 from . import xlstm as XL
-from .params import P, init_from_template, stack, count_params
+from .params import P, count_params, init_from_template, stack
 
 
 # ===========================================================================
@@ -298,10 +298,12 @@ def _cache_layout(cfg: ArchConfig, b: int, max_len: int, dtype, emit):
     d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.hd
     W = _cache_len(cfg, max_len)
     kvc = lambda n, w=W, extra=(): {
-        "k": emit((n,) + extra + (b, w, kv, hd),
-                  dtype, ("layers",) + (None,) * len(extra) + ("batch", None, "kv_heads", "head_dim")),
-        "v": emit((n,) + extra + (b, w, kv, hd),
-                  dtype, ("layers",) + (None,) * len(extra) + ("batch", None, "kv_heads", "head_dim")),
+        "k": emit((n,) + extra + (b, w, kv, hd), dtype,
+                  ("layers",) + (None,) * len(extra)
+                  + ("batch", None, "kv_heads", "head_dim")),
+        "v": emit((n,) + extra + (b, w, kv, hd), dtype,
+                  ("layers",) + (None,) * len(extra)
+                  + ("batch", None, "kv_heads", "head_dim")),
     }
     fam = cfg.family
     if fam in ("dense", "moe"):
@@ -553,7 +555,8 @@ def decode_step(cfg: ArchConfig, params, cache, token, pos):
 
         x, kv2 = jax.lax.scan(
             body, x,
-            (params["dec_layers"], cache["self_kv"], cache["cross_kv"]["k"], cache["cross_kv"]["v"]),
+            (params["dec_layers"], cache["self_kv"],
+             cache["cross_kv"]["k"], cache["cross_kv"]["v"]),
         )
         cache = {"self_kv": kv2, "cross_kv": cache["cross_kv"]}
     else:

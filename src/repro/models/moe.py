@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import primitives as prim
 from repro.dist.sharding import shard_act
+
 from .params import P
 
 

@@ -15,8 +15,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .params import P
 from repro.dist.sharding import shard_act
+
+from .params import P
 
 
 def ssm_tmpl(d: int, cfg):

@@ -15,8 +15,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .params import P
 from repro.dist.sharding import shard_act
+
+from .params import P
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +67,8 @@ def _mlstm_qkvg(p, x, cfg, d, conv_state=None):
     q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"]) / jnp.sqrt(dk).astype(x.dtype)
     k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"])
-    g = jnp.einsum("bsd,dhg->bshg", xc, p["wgate"]).astype(jnp.float32) + p["gate_b"].astype(jnp.float32)
+    g = (jnp.einsum("bsd,dhg->bshg", xc, p["wgate"]).astype(jnp.float32)
+         + p["gate_b"].astype(jnp.float32))
     ipre, fpre = g[..., 0], g[..., 1]
     return q, k, v, ipre, fpre, z, new_state, inner, nh, dk
 

@@ -16,9 +16,9 @@ from __future__ import annotations
 
 import json
 import os
+from pathlib import Path
 import shutil
 import tempfile
-from pathlib import Path
 
 import jax
 import numpy as np

@@ -20,11 +20,9 @@ import dataclasses
 import signal
 import statistics
 import time
-from pathlib import Path
 from typing import Callable
 
 import jax
-import numpy as np
 
 from . import checkpoint as CKPT
 

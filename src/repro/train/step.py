@@ -14,15 +14,15 @@ inspected by the roofline pass instead.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.configs.base import ArchConfig, ShapeSpec
+from repro.configs.base import ArchConfig
 from repro.dist import sharding as SH
 from repro.models import model as M
+
 from .optimizer import AdamW, AdamWState
 
 
@@ -116,7 +116,8 @@ def build_train_step(cfg: ArchConfig, mesh, rules: SH.ShardingRules, opt: AdamW,
     jitted = jax.jit(
         step,
         in_shardings=(psh, osh, bsh),
-        out_shardings=(psh, osh, jax.tree_util.tree_map(lambda _: rep, {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0})),
+        out_shardings=(psh, osh, jax.tree_util.tree_map(
+            lambda _: rep, {"ce": 0, "aux": 0, "loss": 0, "grad_norm": 0})),
         donate_argnums=(0, 1) if donate else (),
     )
     return jitted, psh, bsh

@@ -4,15 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import Table, KEY_SENTINEL
-from repro.data import relgen
-from repro.data.pipeline import (FeatureJoinConfig, assemble_batch,
-                                 history_aggregates, make_dim_tables,
-                                 make_fact_batch)
-from repro.data.synthetic import make_batch_fn
 from repro.configs.base import get_reduced_config
+from repro.core import KEY_SENTINEL
+from repro.data import relgen
+from repro.data.pipeline import (FeatureJoinConfig, assemble_batch, history_aggregates,
+                                 make_dim_tables, make_fact_batch)
+from repro.data.synthetic import make_batch_fn
 from repro.models import model as M
 from repro.serve.engine import Request, ServeEngine
 

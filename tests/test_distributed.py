@@ -4,8 +4,6 @@ elastic remesh, pipeline parallelism, compressed DP all-reduce, dry-run on
 tiny configs for both mesh layouts."""
 from __future__ import annotations
 
-import pytest
-
 from conftest import run_subtest
 
 
@@ -38,7 +36,9 @@ def ref_step(params, opt_state, batch):
     return p, s, dict(met, loss=l)
 p1, s1, m1 = jax.jit(ref_step)(params, opt_state, batch)
 dl = abs(float(m1["loss"]) - float(m2["loss"]))
-dw = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)))
+dw = max(float(jnp.abs(a - b).max())
+         for a, b in zip(jax.tree_util.tree_leaves(p1),
+                         jax.tree_util.tree_leaves(p2)))
 print("dloss", dl, "dw", dw)
 assert dl < 1e-4 and dw < 5e-3  # Adam amplifies reduction-order noise
 print("OK")
@@ -95,7 +95,8 @@ for arch in ("olmo-1b", "mixtral-8x7b", "zamba2-2.7b", "whisper-large-v3"):
         jitted, _, _ = STEP.build_train_step(cfg, mesh, rules, opt, microbatches=2)
         batch = {"tokens": jax.ShapeDtypeStruct((4, 33), jnp.int32)}
         if cfg.family == "vlm":
-            batch["vision_emb"] = jax.ShapeDtypeStruct((4, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            batch["vision_emb"] = jax.ShapeDtypeStruct(
+                (4, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
         if cfg.family == "audio":
             batch["enc_emb"] = jax.ShapeDtypeStruct((4, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
         lowered = jitted.lower(ap, abstract_opt_state(tmpl), batch)

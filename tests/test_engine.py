@@ -5,14 +5,13 @@ Payload sums use wraparound-aware comparison where relgen payloads (~2^31)
 can overflow the device's int32 accumulators."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.table import KEY_SENTINEL, Table
 from repro.data import relgen
-from repro.engine import (Catalog, optimize, output_columns, scan)
+from repro.engine import Catalog, optimize, output_columns, scan
 from repro.engine import logical as L
 
 # profile measurement is exercised in test_planner; keep these tests fast

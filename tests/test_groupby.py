@@ -4,13 +4,13 @@ from __future__ import annotations
 
 import collections
 
+from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (Table, group_aggregate, groupby_partition_checked,
-                        groupby_partition_overflowed, KEY_SENTINEL)
+from repro.core import (KEY_SENTINEL, Table, group_aggregate, groupby_partition_checked,
+                        groupby_partition_overflowed)
 
 STRATEGIES = ["sort", "partition_hash", "scatter", "partition"]
 

@@ -13,11 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (JoinStats, KEY_SENTINEL, Table, group_aggregate,
-                        groupjoin_checked, groupjoin_overflowed,
-                        groupjoin_required_groups, join, phj_groupjoin,
-                        predict_groupby_time, predict_groupjoin_time,
-                        predict_join_time)
+from repro.core import (KEY_SENTINEL, JoinStats, Table, group_aggregate, groupjoin_checked,
+                        groupjoin_overflowed, groupjoin_required_groups, join, phj_groupjoin,
+                        predict_groupby_time, predict_groupjoin_time, predict_join_time)
 
 
 def make_workload(rng, n_r, n_s, n_groups, match_ratio=1.0, riders=0):
@@ -396,3 +394,45 @@ def test_engine_force_join_disables_fusion(rng):
     q = scan("S").join(scan("R"), key="k").group_by("g", rv="sum")
     plan = optimize(q, cat, force_join=("phj", "gftr"), **OPT)
     assert "GroupJoin[" not in plan.explain()
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-pinned structural claims, via the shared repro.analysis API: the
+# fused plan's compiled budget matches what the cost model priced — the
+# accumulator's sorts only, zero join-output materialization
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy,max_sorts",
+                         [("sort", 1), ("scatter", 0)])
+def test_groupjoin_compiled_budget_honors_contract(strategy, max_sorts, rng):
+    import functools
+
+    from repro import analysis
+
+    R, S = make_workload(rng, 256, 2048, 32)
+    fn = functools.partial(phj_groupjoin, key="k", group_key="g",
+                           aggs={"rv": "sum", "sv": "mean"}, num_groups=64,
+                           agg_strategy=strategy)
+    rep = analysis.audit_fn(fn, R, S)
+    assert rep.budget.sorts <= max_sorts
+    # the full priced contract (sorts, float scatter-adds, peak-live bound,
+    # no silent 64-bit promotion) holds for the compiled trace
+    analysis.enforce(analysis.groupjoin_contract(strategy, 2), rep)
+
+
+def test_unfused_pipeline_trips_materialization_contract(rng):
+    """The same query, unfused with a fat join capacity, must violate the
+    group-join's peak-live contract — that asymmetry IS the fusion claim."""
+    from repro import analysis
+
+    R, S = make_workload(rng, 256, 8192, 32)
+
+    def unfused(R, S):
+        T, _ = join(R, S, key="k", algorithm="phj", pattern="gftr",
+                    out_size=512 * S.num_rows, mode="mn")
+        return group_aggregate(T.select(("g", "rv", "sv")), key="g",
+                               aggs={"rv": "sum", "sv": "mean"},
+                               num_groups=64, strategy="sort")
+
+    rep = analysis.audit_fn(unfused, R, S)
+    with pytest.raises(analysis.MaterializationViolation):
+        analysis.enforce(analysis.groupjoin_contract("sort", 2), rep)

@@ -8,12 +8,12 @@ from __future__ import annotations
 
 import collections
 
+from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import Table, join, join_sequence, KEY_SENTINEL
+from repro.core import KEY_SENTINEL, Table, join, join_sequence
 
 ALGS_PATTERNS = [
     ("smj", "gfur"), ("smj", "gftr"),

@@ -2,18 +2,15 @@
 sweeping shapes and dtypes (hypothesis) per the repo contract."""
 from __future__ import annotations
 
+from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.histogram import histogram_pallas
 from repro.kernels.radix_partition import partition_ranks_pallas
-from repro.kernels.merge_join import lower_bound_windowed_pallas
-from repro.kernels.hash_probe import hash_probe_pallas, layout_probe_blocks
-from repro.kernels.gather import gather_windowed_pallas
 from repro.kernels.segsum import segsum_partials_pallas
 
 

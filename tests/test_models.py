@@ -9,8 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import (SHAPES, get_config, get_reduced_config,
-                                list_archs, cell_is_runnable)
+from repro.configs.base import SHAPES, cell_is_runnable, get_config, get_reduced_config, list_archs
 from repro.models import model as M
 
 ARCHS = list_archs()

@@ -4,10 +4,10 @@ payload-carrying primitives, and every sort/partition path hands back int32
 layout arrays (hypothesis properties + fixed cases)."""
 from __future__ import annotations
 
+from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import primitives as prim
 from repro.kernels import ops as kops
@@ -102,15 +102,9 @@ def test_apply_permutation_return_shape(rng):
 # "One gather per column" is measurable: however wide the payload, each
 # sort/partition path traces exactly as many sort ops as it has key plans
 # ---------------------------------------------------------------------------
-def _count_sorts(jaxpr):
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "sort":
-            n += 1
-        for sub in eqn.params.values():
-            if hasattr(sub, "jaxpr"):
-                n += _count_sorts(sub.jaxpr)
-    return n
+# (the recursive sort counter lives in repro.analysis now — one
+# implementation, shared by tests, the executor audit, and the CLI gate)
+from repro.analysis import count_sorts as _count_sorts  # noqa: E402
 
 
 def _wide_tables(rng, n=512, cols=4):

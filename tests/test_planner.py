@@ -11,8 +11,7 @@ import pytest
 
 from repro.core import JoinStats, choose_algorithm, choose_smj_pattern
 from repro.core.groupby import choose_groupby_strategy
-from repro.core.planner import (PrimitiveProfile, predict_groupby_time,
-                                predict_join_time)
+from repro.core.planner import PrimitiveProfile, predict_groupby_time, predict_join_time
 from repro.data import relgen
 from repro.engine import stats as est
 

@@ -2,13 +2,12 @@
 expansion, multi-pass radix composition, hash quality (hypothesis)."""
 from __future__ import annotations
 
+from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import primitives as prim
-from repro.core.hash_join import hash32, choose_partition_bits
+from repro.core.hash_join import choose_partition_bits, hash32
 
 
 @settings(max_examples=20, deadline=None)

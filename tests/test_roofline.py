@@ -2,11 +2,10 @@
 recovery, term math, analytic-vs-model cross-checks."""
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
-from repro.launch import roofline as RL
 from repro.configs.base import SHAPES, get_config
+from repro.launch import roofline as RL
 from repro.models import flops as FL
 from repro.models.model import num_params
 

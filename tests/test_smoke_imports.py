@@ -14,9 +14,8 @@ import pkgutil
 import subprocess
 import sys
 
-import pytest
-
 from conftest import REPO
+import pytest
 
 SRC = os.path.join(REPO, "src")
 

@@ -2,12 +2,8 @@
 relational pipeline feeds training, launchers run, planner/memmodel hold."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs.base import get_reduced_config
 from repro.core import JoinStats, choose_algorithm, choose_smj_pattern
 from repro.core.memmodel import gftr_ledger, gfur_ledger, peak_memory
 from repro.core.planner import PrimitiveProfile, predict_join_time

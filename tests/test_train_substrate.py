@@ -1,20 +1,15 @@
 """Optimizer, checkpointing, fault-tolerant loop, grad compression."""
 from __future__ import annotations
 
-import functools
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.train.optimizer import AdamW, cosine_schedule, global_norm
+from repro.dist.collectives import (dequantize_int8, ef_compress_decompress, init_ef_state,
+                                    quantize_int8)
 from repro.train import checkpoint as CKPT
 from repro.train.loop import LoopConfig, train_loop
-from repro.dist.collectives import (EFState, ef_compress_decompress,
-                                    init_ef_state, quantize_int8,
-                                    dequantize_int8)
+from repro.train.optimizer import AdamW, cosine_schedule
 
 
 # ---------------------------------------------------------------------------
