@@ -8,9 +8,8 @@ figure-relevant ratio (speedup, GB/s-equivalent, bytes)."""
 from __future__ import annotations
 
 import os
-import time
 
-import jax
+from repro.obs.trace import median_wall
 
 # default row counts (CPU-feasible; override with REPRO_BENCH_SCALE env)
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
@@ -43,16 +42,11 @@ def fingerprint(name: str, fn, *args):
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
-    """Median wall time (us) of jit-compiled fn(*args)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    """Median wall time (us) of jit-compiled fn(*args), measured by the
+    shared obs timing primitive (`repro.obs.trace.timed_call`: explicit
+    block_until_ready on every output leaf, median-of-k) — benchmark
+    numbers and trace numbers come from the same stopwatch."""
+    return median_wall(fn, *args, iters=iters, warmup=warmup) * 1e6
 
 
 def join_throughput(n_r: int, n_s: int, us: float) -> str:

@@ -109,6 +109,10 @@ def partition_sweep():
             us = us_by[strat]
             model_us = predict_groupby_time(n, 1, strat) * 1e6
             derived = f"model {model_us:.0f}us; {n/(us/1e6)/1e6:.1f} Mrows/s"
+            # per-strategy residual (measured/modeled): the trajectory the
+            # calibration loop's EWMAs track — see repro.obs.residuals
+            emit(f"groupby/partition/G{g}/{strat}/residual", us / model_us,
+                 f"measured {us:.0f}us / model {model_us:.0f}us")
             if strat == "partition":
                 s8 = (predict_groupby_time(n, 1, "sort", key_bytes=8)
                       / predict_groupby_time(n, 1, "partition", key_bytes=8))

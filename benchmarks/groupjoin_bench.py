@@ -43,14 +43,15 @@ def _unfused(R, S, aggs, num_groups, strategy):
                            strategy=strategy)
 
 
-def _model_speedup(n_r, n_s, r_pay, s_pay, n_aggs, strategy, build_aggs):
+def _model_times(n_r, n_s, r_pay, s_pay, n_aggs, strategy, build_aggs):
+    """(unfused_s, fused_s) predicted by the §5.4 cost model."""
     st = JoinStats(n_r=n_r, n_s=n_s, r_payload_cols=r_pay,
                    s_payload_cols=s_pay, match_ratio=1.0)
     unfused = (predict_join_time(st, "phj", "gftr")["total"]
                + predict_groupby_time(n_s, n_aggs, strategy))
     fused = predict_groupjoin_time(st, n_aggs, strategy,
                                    build_aggs=build_aggs)["total"]
-    return unfused / fused
+    return unfused, fused
 
 
 def fused_vs_unfused():
@@ -83,11 +84,21 @@ def fused_vs_unfused():
                     f_fu, R, S)
         fingerprint(f"groupjoin/G{n_groups}/x{extra}/{strategy}/unfused",
                     f_un, R, S)
-        model = _model_speedup(n_r, n_s, 1, 2 + extra, len(aggs), strategy,
-                               build_aggs=1)  # rv comes from the build side
+        model_un, model_fu = _model_times(
+            n_r, n_s, 1, 2 + extra, len(aggs), strategy,
+            build_aggs=1)  # rv comes from the build side
+        model = model_un / model_fu
         emit(f"groupjoin/G{n_groups}/x{extra}/{strategy}/fused", us_fu,
              f"unfused {us_un:.0f}us; measured {us_un/us_fu:.2f}x; "
              f"model {model:.2f}x")
+        # per-path residuals (measured/modeled absolute times): what the
+        # calibration loop's EWMAs track — see repro.obs.residuals
+        emit(f"groupjoin/G{n_groups}/x{extra}/{strategy}/fused/residual",
+             us_fu / (model_fu * 1e6),
+             f"measured {us_fu:.0f}us / model {model_fu*1e6:.0f}us")
+        emit(f"groupjoin/G{n_groups}/x{extra}/{strategy}/unfused/residual",
+             us_un / (model_un * 1e6),
+             f"measured {us_un:.0f}us / model {model_un*1e6:.0f}us")
 
 
 def engine_fusion():

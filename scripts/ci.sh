@@ -31,6 +31,34 @@ assert rep["operators"] and rep["kernels"] and rep["engine"]
 PY
 echo "ci: repro.analysis contract sweep OK (ANALYSIS.json, 0 violations)"
 
+# Observability smoke: run the standard traced workload, then assert the
+# emitted artifacts against their schemas — every trace node must carry
+# predicted + measured + residual, and CALIBRATION.json must hold both a
+# device profile and non-empty residual EWMAs for the traced backend
+# (DESIGN.md §12).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.obs --smoke > /dev/null
+test -s TRACE.json
+test -s CALIBRATION.json
+python - <<'PY'
+import json
+tr = json.load(open("TRACE.json"))
+assert tr["backend"] and tr["queries"], "TRACE.json missing backend/queries"
+for name, q in tr["queries"].items():
+    assert q["nodes"], (name, "no nodes")
+    for node in q["nodes"]:
+        for key in ("predicted_s", "measured_s", "residual",
+                    "op", "rows_out", "path"):
+            assert key in node, (name, node.get("op"), "missing", key)
+        assert node["measured_s"] > 0, (name, node["op"], "unmeasured")
+cal = json.load(open("CALIBRATION.json"))
+ent = cal[tr["backend"]]
+assert ent["profiles"], "CALIBRATION.json entry has no device profile"
+assert ent["residuals"], "CALIBRATION.json entry has no residual EWMAs"
+assert all("ewma" in r and "count" in r for r in ent["residuals"].values())
+PY
+echo "ci: obs traced smoke OK (TRACE.json + CALIBRATION.json schemas)"
+
 # Smoke-scale end-to-end benchmark (engine section only): catches benchmark
 # bitrot — a benchmark that no longer runs fails CI instead of rotting.
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
@@ -52,6 +80,11 @@ for kind in ("speedup_vs_sort_measured", "speedup_vs_sort_modeled"):
     keys = [k for k in rows if k.endswith(kind)]
     assert keys, f"BENCH_groupby.json is missing {kind} trajectory keys"
     assert all(rows[k] > 0 for k in keys), (kind, keys)
+# per-strategy residual summaries (measured/modeled) feed the calibration
+# trajectory: one per (cardinality, strategy) point
+res = [k for k in rows if k.endswith("/residual")]
+assert res, "BENCH_groupby.json is missing per-strategy residual keys"
+assert all(rows[k] > 0 for k in res), res
 # every timing trajectory carries its structural fingerprint (plan budget
 # + peak live bytes) so perf and plan-shape regressions are separable
 fps = [k for k in rows if k.endswith("__structure")]
@@ -72,5 +105,10 @@ rows = json.load(open("BENCH_groupjoin.json"))
 fps = [k for k in rows if k.endswith("__structure")]
 assert fps, "BENCH_groupjoin.json is missing __structure fingerprints"
 assert all("budget" in rows[k] and "peak_live_bytes" in rows[k] for k in fps)
+# fused and unfused paths both carry measured/modeled residual summaries
+for kind in ("/fused/residual", "/unfused/residual"):
+    keys = [k for k in rows if k.endswith(kind)]
+    assert keys, f"BENCH_groupjoin.json is missing {kind} keys"
+    assert all(rows[k] > 0 for k in keys), (kind, keys)
 PY
 echo "ci: smoke-scale groupjoin benchmark OK (BENCH_groupjoin.json + fingerprints)"

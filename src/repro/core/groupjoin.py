@@ -273,6 +273,9 @@ def groupjoin_checked(R: Table, S: Table, *, key: str = "k", group_key: str,
         S, key=key, group_key=group_key,
         agg_strategy=kw.get("agg_strategy", "sort"))
     if required > num_groups:
+        from repro.obs import metrics  # deferred: core never needs obs otherwise
+
+        metrics.counter("core.overflow_escalations").inc()
         # lane-friendly growth, mirroring the engine's capacity rounding
         num_groups = -(-required // 64) * 64
     return phj_groupjoin(R, S, key=key, group_key=group_key, aggs=aggs,

@@ -278,6 +278,10 @@ def escalate_partition_bits(R: Table, *, key: str = "k",
         overflow, _ = phj_overflowed(R, key=key, build_block=build_block,
                                      partition_bits=p_bits + extra,
                                      hash_keys=hash_keys)
+    if extra:
+        from repro.obs import metrics  # deferred: core never needs obs otherwise
+
+        metrics.counter("core.overflow_escalations").inc()
     return p_bits + extra
 
 

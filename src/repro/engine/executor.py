@@ -24,9 +24,26 @@ import jax.numpy as jnp
 from repro.core import group_aggregate, join, phj_groupjoin
 from repro.core import primitives as prim
 from repro.core.table import KEY_SENTINEL, Table
+from repro.obs import metrics
 
 from . import physical as P
 from .logical import FILTER_OP_FNS
+
+
+class Materialized:
+    """Pseudo plan node wrapping an already-computed ``(Table, count)``
+    pair. The per-node tracer (repro.obs.trace) substitutes these for a
+    node's children so `execute` times exactly one operator while its
+    inputs arrive as traced jit arguments. Untraced execution never
+    constructs one."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = value
+
+    def children(self):
+        return ()
 
 
 def _valid_mask(table: Table, count) -> jax.Array:
@@ -43,6 +60,8 @@ def _mask_key(table: Table, count, key: str) -> Table:
 
 def execute(node: P.PhysNode, tables: Mapping[str, Table]):
     """Interpret the plan bottom-up. Returns (Table, valid_count)."""
+    if isinstance(node, Materialized):
+        return node.value
     if isinstance(node, P.PScan):
         t = tables[node.table]
         return t, jnp.asarray(t.num_rows, jnp.int32)
@@ -207,6 +226,7 @@ def audit(plan: "P.PhysicalPlan",
     from repro.analysis import contracts as C
     from repro.analysis import jaxpr_audit as A
 
+    metrics.counter("engine.contract_audits").inc()
     tables = dict(tables if tables is not None else plan.catalog.tables)
     reports: dict = {}
 
@@ -236,14 +256,30 @@ def audit(plan: "P.PhysicalPlan",
 
 
 def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
-        *, jit: bool = True):
+        *, jit: bool = True, trace: bool = False, trace_iters: int = 1,
+        trace_warmup: int = 1):
     """Execute a PhysicalPlan. `tables` defaults to the catalog's; pass new
     same-shape tables to reuse one compiled plan across datasets. The jitted
     executor is cached on the plan, so repeated `run()` calls trace and
-    compile once."""
+    compile once.
+
+    With ``trace=True`` the plan runs node by node under the span tracer
+    (repro.obs.trace) and returns ``(table, count, QueryTrace)`` — per-node
+    device-synced wall times, rows/bytes, and predicted-vs-measured
+    residuals. Tracing is strictly opt-in: the untraced path below is the
+    exact pre-trace code path (no Span allocation, identical whole-plan
+    jaxpr — pinned by tests/test_obs.py)."""
+    if trace:
+        from repro.obs.trace import trace_execute
+
+        return trace_execute(plan, tables, iters=trace_iters,
+                             warmup=trace_warmup)
     tables = dict(tables if tables is not None else plan.catalog.tables)
     if not jit:
         return execute(plan.root, tables)
     if plan.compiled is None:
         plan.compiled = jax.jit(lambda tb: execute(plan.root, tb))
+        metrics.counter("engine.plans_compiled").inc()
+    else:
+        metrics.counter("engine.plan_cache_hits").inc()
     return plan.compiled(tables)

@@ -43,19 +43,48 @@ from repro.core.planner import (JoinStats, PrimitiveProfile, choose_algorithm, c
 from . import logical as L
 from . import stats as S
 
-_PROFILE_CACHE: PrimitiveProfile | None = None
+# in-process profile cache, keyed by (backend fingerprint, calibration n):
+# a later call with a different n must re-measure, not silently reuse the
+# first profile (pass structure is n-independent but measured bandwidths
+# are not, and tests calibrate at several sizes)
+_PROFILE_CACHE: dict = {}
 
 
 def calibrated_profile(n: int = 1 << 16) -> PrimitiveProfile:
-    """Measured primitive profile (cached per process); falls back to the
-    built-in v5e constants when the microbenchmarks cannot run."""
-    global _PROFILE_CACHE
-    if _PROFILE_CACHE is None:
+    """Measured primitive profile, cached per (backend, n) in-process AND
+    persisted across processes in the calibration store (CALIBRATION.json,
+    keyed by backend fingerprint — repro.obs.calibration): the second
+    process on the same backend loads the stored constants instead of
+    re-running the microbenchmarks. Falls back to the built-in v5e
+    constants when the microbenchmarks cannot run (never persisted — a
+    fallback must not masquerade as a measurement)."""
+    from repro.obs import calibration as cal
+
+    try:
+        fp = cal.backend_fingerprint()
+    except Exception:  # noqa: BLE001 — no backend at all
+        fp = "unknown"
+    key = (fp, n)
+    if key in _PROFILE_CACHE:
+        return _PROFILE_CACHE[key]
+    store = None
+    try:
+        store = cal.CalibrationStore()
+        prof = store.get_profile(fp, n)
+    except (ValueError, OSError):  # bad REPRO_CALIBRATION_PATH etc.
+        prof = None
+    if prof is None:
         try:
-            _PROFILE_CACHE = PrimitiveProfile.measure(n=n)
+            prof = PrimitiveProfile.measure(n=n)
+            if store is not None:
+                try:
+                    store.put_profile(fp, n, prof)
+                    store.save()
+                except OSError:
+                    pass  # read-only checkout: calibration stays in-process
         except Exception:  # noqa: BLE001 — any device/timer failure
-            _PROFILE_CACHE = PrimitiveProfile()
-    return _PROFILE_CACHE
+            return _PROFILE_CACHE.setdefault(key, PrimitiveProfile())
+    return _PROFILE_CACHE.setdefault(key, prof)
 
 
 def _round_capacity(est: float, safety: float, lo: int = 64,
@@ -188,15 +217,17 @@ class PGroupBy(PhysNode):
     strategy: str = "sort"
     agg_kw: tuple = ()  # extra group_aggregate kwargs (multiplicity-scaled block)
     rationale: str = ""
+    regret: str = ""  # residual-store regret flag (obs.residuals), "" if none
 
     def children(self):
         return (self.child,)
 
     def describe(self):
         a = ", ".join(f"{op}({c})" for c, op in self.aggs)
+        flag = f" {self.regret}" if self.regret else ""
         return (f"GroupBy[{self.strategy}] key={self.key} aggs=({a}) "
                 f"groups~{int(self.est_rows)} cap={self.capacity} "
-                f"cost={self.cost*1e6:.0f}us why: {self.rationale}")
+                f"cost={self.cost*1e6:.0f}us why: {self.rationale}{flag}")
 
 
 @dataclasses.dataclass
@@ -218,6 +249,7 @@ class PGroupJoin(PhysNode):
     agg_strategy: str = "sort"
     agg_kw: tuple = ()  # extra accumulator kwargs (multiplicity-scaled block)
     rationale: str = ""
+    regret: str = ""  # residual-store regret flag (obs.residuals), "" if none
     join_stats: JoinStats | None = None
     phase_times: dict | None = None
 
@@ -226,10 +258,11 @@ class PGroupJoin(PhysNode):
 
     def describe(self):
         a = ", ".join(f"{op}({c})" for c, op in self.aggs)
+        flag = f" {self.regret}" if self.regret else ""
         return (f"GroupJoin[phj+{self.agg_strategy} pk_fk] "
                 f"key={self.group_key} aggs=({a}) "
                 f"groups~{int(self.est_rows)} cap={self.capacity} "
-                f"cost={self.cost*1e6:.0f}us why: {self.rationale}")
+                f"cost={self.cost*1e6:.0f}us why: {self.rationale}{flag}")
 
 
 @dataclasses.dataclass
@@ -255,13 +288,19 @@ class PhysicalPlan:
     total_cost: float
     compiled: object = dataclasses.field(default=None, repr=False, compare=False)
 
-    def explain(self, verify: bool = False, tables: Mapping | None = None) -> str:
+    def explain(self, verify: bool = False, tables: Mapping | None = None,
+                actuals=None) -> str:
         """Render the plan tree. With `verify=True`, trace every subtree,
         print each node's priced contract next to its compiled primitive
         budget (DESIGN.md §11), and raise the first
         `analysis.ContractViolation` if any compiled budget diverges from
         what the cost model priced — the rendered plan rides along in the
-        exception message."""
+        exception message.
+
+        With `actuals=` (a `repro.obs.QueryTrace` from running THIS plan
+        traced), annotate every plan line with the node's predicted vs
+        measured time and the measured/modeled residual, flagging >2x
+        divergences — the measured side of priced-vs-compiled (§12)."""
         lines = [f"physical plan  predicted_total={self.total_cost*1e6:.0f}us"]
         plan_audit = None
         if verify:
@@ -269,8 +308,9 @@ class PhysicalPlan:
 
             plan_audit = executor.audit(self, tables)
         by_node = plan_audit.by_node() if plan_audit else {}
+        spans = actuals.by_path() if actuals is not None else {}
 
-        def walk(node, prefix, is_last, label=""):
+        def walk(node, prefix, is_last, label="", path=()):
             branch = "└─ " if is_last else "├─ "
             lab = f"{label}: " if label else ""
             lines.append(prefix + branch + lab + node.describe())
@@ -284,13 +324,24 @@ class PhysicalPlan:
                     f"compiled[{compiled}] "
                     f"peak-live={entry.report.peak_live_bytes/1024:.0f}KiB "
                     f"{status}")
+            span = spans.get(path)
+            if span is not None:
+                if span.residual is not None:
+                    res = f"residual[{span.residual:.2f}x]"
+                    if span.residual >= 2.0 or span.residual <= 0.5:
+                        res += " ** >2x DIVERGENCE **"
+                else:
+                    res = "residual[-]"
+                lines.append(
+                    f"{prefix}{ext}     predicted[{span.predicted_s*1e6:.0f}us] "
+                    f"measured[{span.wall_s*1e6:.0f}us] {res}")
             kids = node.children()
             labels = (
                 ("build", "probe") if isinstance(node, (PJoin, PGroupJoin))
                 else ("",) * len(kids)
             )
             for i, (k, klab) in enumerate(zip(kids, labels)):
-                walk(k, prefix + ext, i == len(kids) - 1, klab)
+                walk(k, prefix + ext, i == len(kids) - 1, klab, path + (i,))
 
         walk(self.root, "", True)
         rendered = "\n".join(lines)
@@ -299,12 +350,17 @@ class PhysicalPlan:
             raise type(first)(f"{first}\n{rendered}")
         return rendered
 
-    def run(self, tables: Mapping | None = None, *, jit: bool = True):
+    def run(self, tables: Mapping | None = None, *, jit: bool = True,
+            trace: bool = False, trace_iters: int = 1,
+            trace_warmup: int = 1):
         """Execute over `tables` (default: the catalog's). Returns
-        (Table, valid_count)."""
+        (Table, valid_count) — or (Table, valid_count, QueryTrace) with
+        ``trace=True`` (per-node spans, see repro.obs.trace)."""
         from . import executor
 
-        return executor.run(self, tables, jit=jit)
+        return executor.run(self, tables, jit=jit, trace=trace,
+                            trace_iters=trace_iters,
+                            trace_warmup=trace_warmup)
 
 
 # ---------------------------------------------------------------------------
@@ -313,13 +369,47 @@ class PhysicalPlan:
 class Optimizer:
     def __init__(self, catalog: "S.Catalog", *, profile: PrimitiveProfile | None = None,
                  safety: float = 1.5, measure_profile: bool = True,
-                 force_join: tuple[str, str] | None = None):
+                 force_join: tuple[str, str] | None = None,
+                 residuals=None):
         self.catalog = catalog
         self.profile = profile or (
             calibrated_profile() if measure_profile else PrimitiveProfile()
         )
         self.safety = safety
         self.force_join = force_join
+        # measured/modeled residual feedback (obs.residuals.ResidualStore);
+        # None -> lazily load this backend's store from CALIBRATION.json.
+        # Advisory only: residuals annotate plans with a regret flag when
+        # last run's measurements say the predicted winner lost by >2x —
+        # they never flip a choice (the stored ratios may come from
+        # different shapes than this query's).
+        self._residuals = residuals
+
+    def _residual_store(self):
+        if self._residuals is None:
+            try:
+                from repro.obs.calibration import load_residuals
+
+                self._residuals = load_residuals()
+            except Exception:  # noqa: BLE001 — obs must never break planning
+                from repro.obs.residuals import ResidualStore
+
+                self._residuals = ResidualStore()
+        return self._residuals
+
+    def _regret(self, op: str, chosen: str, chosen_cost: float,
+                alternatives: dict) -> str:
+        """Regret flag for a strategy choice: replay it with each
+        candidate's predicted time scaled by the residual store's
+        measured/modeled EWMA (obs.residuals.regret_check)."""
+        try:
+            from repro.obs.residuals import regret_check
+
+            choices = dict(alternatives)
+            choices[chosen] = chosen_cost
+            return regret_check(self._residual_store(), op, choices, chosen)
+        except Exception:  # noqa: BLE001 — obs must never break planning
+            return ""
 
     # -- entry --------------------------------------------------------------
     def optimize(self, plan: L.Plan) -> PhysicalPlan:
@@ -800,10 +890,33 @@ class Optimizer:
                                           unfused_cost=child.cost + cost)
         if fused is not None:
             if fused.cost < child.cost + cost:
+                # regret check vs the rejected unfused plan, with BOTH
+                # sides residual-corrected (the unfused side splits into
+                # the join's and the accumulator's own stored ratios)
+                try:
+                    store = self._residual_store()
+                    unfused_c = (
+                        child.cost * store.correction(
+                            "join", f"{child.algorithm}/{child.pattern}")
+                        + cost * store.correction("groupby", strategy))
+                except Exception:  # noqa: BLE001
+                    unfused_c = child.cost + cost
+                fused.regret = self._regret(
+                    "groupjoin", f"phj+{fused.agg_strategy}", fused.cost,
+                    {"join+groupby": unfused_c})
                 return fused
             rationale += (
                 f"; fusion rejected: GroupJoin {fused.cost*1e6:.0f}us >= "
                 f"join+group-by {(child.cost + cost)*1e6:.0f}us")
+        # regret flag: replay the strategy choice with residual-corrected
+        # costs — flags (never flips) a chooser whose predicted winner
+        # lost by >2x in this backend's residual store
+        regret = self._regret(
+            "groupby", strategy, cost,
+            {s: predict_groupby_time(child.capacity, len(node.aggs), s,
+                                     self.profile)
+             for s in ("sort", "partition", "partition_hash")
+             if s != strategy})
         col_stats = {node.key: ks} if ks else {}
         return PGroupBy(
             est_rows=min(est_groups, cap), capacity=cap, cost=cost,
@@ -813,6 +926,7 @@ class Optimizer:
             known_unique=frozenset({node.key}),  # one row per group
             child=child, key=node.key, aggs=tuple(node.aggs),
             strategy=strategy, agg_kw=agg_kw, rationale=rationale,
+            regret=regret,
         )
 
     def _try_fuse_group_join(self, node: L.GroupBy, child: PhysNode,
@@ -893,8 +1007,9 @@ class Optimizer:
 def optimize(plan: L.Plan, catalog: "S.Catalog", *,
              profile: PrimitiveProfile | None = None, safety: float = 1.5,
              measure_profile: bool = True,
-             force_join: tuple[str, str] | None = None) -> PhysicalPlan:
+             force_join: tuple[str, str] | None = None,
+             residuals=None) -> PhysicalPlan:
     """Optimize a logical plan against a catalog. See module docstring."""
     return Optimizer(catalog, profile=profile, safety=safety,
-                     measure_profile=measure_profile,
-                     force_join=force_join).optimize(plan)
+                     measure_profile=measure_profile, force_join=force_join,
+                     residuals=residuals).optimize(plan)

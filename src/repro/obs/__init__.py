@@ -1,0 +1,38 @@
+"""repro.obs — runtime observability: tracing, residuals, calibration,
+metrics (DESIGN.md §12).
+
+Closes the loop between the planner's predictions and what the device
+actually does:
+
+  trace        per-node span tracer (`executor.run(..., trace=True)`),
+               QueryTrace exportable as JSON + Chrome trace-event format,
+               and the shared `timed_call`/`median_wall` timing primitive
+  residuals    measured/modeled ratios per (operator, strategy), EWMA'd
+               across runs; `regret_check` flags plans whose predicted
+               winner lost the corrected comparison by >2x
+  calibration  persistent CALIBRATION.json keyed by backend fingerprint:
+               caches `PrimitiveProfile.measure()` across processes and
+               carries the residual feedback the optimizer consults
+  metrics      counter/histogram registry (plans compiled, cache hits,
+               overflow escalations, contract audits)
+
+`python -m repro.obs` runs a standard traced workload, writes TRACE.json,
+updates CALIBRATION.json, and prints the predicted-vs-measured table.
+"""
+from . import metrics
+from .calibration import (DEFAULT_PATH, CalibrationStore, backend_fingerprint,
+                          calibration_path, load_residuals)
+from .residuals import (EWMA_ALPHA, REGRET_FACTOR, NodeResidual, ResidualStore,
+                        regret_check, residuals_of)
+from .trace import (QueryTrace, Span, median_wall, sync_floor, timed_call,
+                    trace_execute)
+
+__all__ = [
+    "QueryTrace", "Span", "trace_execute", "timed_call", "median_wall",
+    "sync_floor",
+    "NodeResidual", "ResidualStore", "residuals_of", "regret_check",
+    "EWMA_ALPHA", "REGRET_FACTOR",
+    "CalibrationStore", "backend_fingerprint", "calibration_path",
+    "load_residuals", "DEFAULT_PATH",
+    "metrics",
+]

@@ -1,0 +1,118 @@
+"""Lightweight counter/histogram registry (DESIGN.md §12).
+
+The runtime scoreboard the serving layer inherits: plans compiled,
+plan-cache hits, overflow escalations, contract audits — anything a
+long-lived process wants to report without attaching a profiler. Metrics
+are plain Python (no jax import, no locks beyond the GIL's atomicity for
+`+=` on ints): incrementing a counter costs one dict lookup + an add, so
+instrumented hot paths stay hot.
+
+Usage::
+
+    from repro.obs import metrics
+
+    metrics.counter("engine.plans_compiled").inc()
+    metrics.histogram("engine.run_wall_s").observe(dt)
+    metrics.snapshot()   # {name: value | summary-dict}, for reporting
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Counter:
+    """Monotone event count."""
+
+    name: str
+    value: int = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def as_value(self):
+        return self.value
+
+
+@dataclasses.dataclass
+class Histogram:
+    """Streaming summary of an observed quantity (count/sum/min/max/last).
+
+    No buckets: the consumers here (CLI tables, BENCH_*.json rows) want the
+    moments, and a full histogram would force a bucket-boundary choice on
+    every metric. `mean` is derived."""
+
+    name: str
+    count: int = 0
+    total: float = 0.0
+    min: float = float("inf")
+    max: float = float("-inf")
+    last: float = 0.0
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.total += x
+        self.min = x if x < self.min else self.min
+        self.max = x if x > self.max else self.max
+        self.last = x
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def as_value(self):
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count, "sum": self.total, "mean": self.mean,
+                "min": self.min, "max": self.max, "last": self.last}
+
+
+class MetricsRegistry:
+    """Name -> metric map. `counter()`/`histogram()` get-or-create, so call
+    sites never coordinate registration; asking for an existing name with
+    the other kind raises (one name, one type)."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, kind):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = kind(name)
+        elif not isinstance(m, kind):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, not {kind.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> dict:
+        return {name: m.as_value() for name, m in sorted(self._metrics.items())}
+
+    def reset(self) -> None:
+        self._metrics.clear()
+
+
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str) -> Counter:
+    return REGISTRY.counter(name)
+
+
+def histogram(name: str) -> Histogram:
+    return REGISTRY.histogram(name)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    REGISTRY.reset()

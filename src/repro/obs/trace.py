@@ -1,0 +1,322 @@
+"""Per-node query tracing: what the device actually did (DESIGN.md §12).
+
+`trace_execute(plan)` runs a physical plan node by node, bottom-up, with a
+device sync around every operator: each node's children are executed
+first, their results fed back in as *traced arguments* (never baked
+constants — XLA would fold a constant subtree away and the "measurement"
+would time nothing), and the node's own jitted computation is timed with
+`timed_call` (explicit `block_until_ready` on all outputs, median-of-k).
+The result is a `QueryTrace` tree of `Span`s carrying, per node:
+
+    wall_s        device-synced median wall time of the node alone
+    predicted_s   the optimizer's cost-model prediction for the node
+    rows_in/out   valid-row counts through the operator
+    bytes_in/out  device bytes entering/leaving (capacity x itemsize)
+    strategy      the chosen algorithm/pattern or group-by strategy
+
+exportable as JSON (`as_dict`/`to_json`) and as Chrome trace-event format
+(`chrome_trace`/`to_chrome_trace` — loadable in Perfetto / about:tracing).
+
+Tracing is strictly opt-in: `executor.run(plan)` without `trace=True`
+never imports this module's machinery, allocates no `Span`, and compiles
+the exact same whole-plan jaxpr as before (pinned by
+tests/test_obs.py::test_untraced_run_is_zero_overhead). Per-node
+attribution necessarily forfeits whole-plan XLA fusion, so the sum of
+span times can exceed the untraced end-to-end time; `overhead_bound_s`
+quantifies the slack the trace itself claims (per-node dispatch/sync
+floor + a relative fusion term), and the traced run times the untraced
+compiled plan too (`e2e_wall_s`) so every trace carries its own
+measured-vs-attributed comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+
+def timed_call(fn, *args, iters: int = 1, warmup: int = 1):
+    """(result, median wall seconds) of `fn(*args)`, blocking on every
+    output leaf before and after each timed call. The shared timing
+    primitive: the tracer, `PrimitiveProfile` consumers, and
+    benchmarks/common.time_fn all measure through here, so benchmark
+    numbers and trace numbers are commensurable."""
+    import jax
+
+    out = None
+    for _ in range(max(warmup, 0)):
+        out = jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return out, max(ts[len(ts) // 2], 0.0)
+
+
+def median_wall(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of jit-ready `fn(*args)` (see `timed_call`)."""
+    return timed_call(fn, *args, iters=iters, warmup=warmup)[1]
+
+
+def sync_floor(iters: int = 5) -> float:
+    """Median wall of a trivial jitted dispatch+sync — the per-node floor
+    a traced run pays that the untraced fused plan does not."""
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x + 1)
+    return timed_call(f, jnp.zeros((8,), jnp.int32), iters=iters, warmup=1)[1]
+
+
+@dataclasses.dataclass
+class Span:
+    """One physical plan node's measured execution."""
+
+    op: str  # operator kind: scan/filter/project/join/groupby/...
+    name: str  # the node's describe() line (choice + estimates)
+    strategy: str  # algorithm/pattern or group-by strategy, "" if n/a
+    path: tuple  # child-index path from the root (root = ())
+    predicted_s: float  # optimizer cost-model prediction (node alone)
+    wall_s: float  # device-synced median wall of the node alone
+    rows_in: int
+    rows_out: int
+    bytes_in: int
+    bytes_out: int
+    t0_s: float  # offset of the timed window from the trace start
+    children: list = dataclasses.field(default_factory=list)
+
+    # allocation counter pinning the zero-overhead contract: an untraced
+    # run must never construct a Span (tests/test_obs.py)
+    allocated = 0
+
+    def __post_init__(self):
+        Span.allocated += 1
+
+    @property
+    def residual(self):
+        """measured/modeled ratio; None where the model prices the node
+        at zero (scan/project carry no predicted cost to divide by)."""
+        if self.predicted_s > 0.0:
+            return self.wall_s / self.predicted_s
+        return None
+
+    def as_dict(self) -> dict:
+        return {
+            "op": self.op, "name": self.name, "strategy": self.strategy,
+            "path": list(self.path), "predicted_s": self.predicted_s,
+            "measured_s": self.wall_s, "residual": self.residual,
+            "rows_in": self.rows_in, "rows_out": self.rows_out,
+            "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
+        }
+
+
+@dataclasses.dataclass
+class QueryTrace:
+    """Measured execution tree of one physical plan."""
+
+    root: Span
+    backend: str  # backend fingerprint (obs.calibration)
+    total_wall_s: float  # whole traced traversal, compiles included
+    e2e_wall_s: float  # untraced compiled whole-plan median wall
+    sync_floor_s: float  # per-dispatch sync floor at trace time
+    iters: int = 1
+    warmup: int = 1
+
+    def spans(self) -> list:
+        out = []
+
+        def walk(s):
+            out.append(s)
+            for c in s.children:
+                walk(c)
+
+        walk(self.root)
+        return out
+
+    def by_path(self) -> dict:
+        return {s.path: s for s in self.spans()}
+
+    @property
+    def sum_wall_s(self) -> float:
+        return sum(s.wall_s for s in self.spans())
+
+    @property
+    def overhead_bound_s(self) -> float:
+        """The slack the trace claims for its own attribution: per-node
+        dispatch/sync floor, plus a relative term for the whole-plan XLA
+        fusion that per-node execution forfeits (a fused filter+join
+        never materializes the filter output; its parts, timed alone,
+        do). Within this bound, the per-node walls must account for the
+        untraced end-to-end time — the acceptance check of DESIGN.md §12."""
+        n = len(self.spans())
+        return n * self.sync_floor_s + 0.75 * max(self.sum_wall_s,
+                                                  self.e2e_wall_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "backend": self.backend,
+            "total_wall_s": self.total_wall_s,
+            "e2e_wall_s": self.e2e_wall_s,
+            "sum_wall_s": self.sum_wall_s,
+            "sync_floor_s": self.sync_floor_s,
+            "overhead_bound_s": self.overhead_bound_s,
+            "iters": self.iters, "warmup": self.warmup,
+            "nodes": [s.as_dict() for s in self.spans()],
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=2, sort_keys=True)
+
+    def chrome_trace(self) -> list:
+        """Chrome trace-event list (Perfetto / about:tracing loadable):
+        one complete ('X') event per span on a single track, timestamps
+        in microseconds from the trace start."""
+        events = []
+        for s in self.spans():
+            events.append({
+                "name": f"{s.op}[{s.strategy}]" if s.strategy else s.op,
+                "cat": "plan-node", "ph": "X",
+                "ts": s.t0_s * 1e6, "dur": max(s.wall_s, 1e-9) * 1e6,
+                "pid": 0, "tid": 0,
+                "args": s.as_dict(),
+            })
+        return events
+
+    def to_chrome_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.chrome_trace(),
+                       "displayTimeUnit": "ms"}, f, indent=2)
+
+    def table(self) -> str:
+        """Human-readable predicted-vs-measured table, one row per node."""
+        head = (f"{'node':<28} {'strategy':<16} {'rows_out':>9} "
+                f"{'predicted':>11} {'measured':>11} {'residual':>9}")
+        lines = [head, "-" * len(head)]
+        for s in self.spans():
+            label = ("  " * len(s.path)) + s.op
+            res = f"{s.residual:.2f}x" if s.residual is not None else "-"
+            flag = " <-- >2x" if s.residual is not None and (
+                s.residual >= 2.0 or s.residual <= 0.5) else ""
+            lines.append(
+                f"{label:<28} {s.strategy:<16} {s.rows_out:>9} "
+                f"{s.predicted_s*1e6:>9.0f}us {s.wall_s*1e6:>9.0f}us "
+                f"{res:>9}{flag}")
+        lines.append(
+            f"{'sum(nodes)':<28} {'':<16} {'':>9} "
+            f"{'':>11} {self.sum_wall_s*1e6:>9.0f}us "
+            f"(e2e {self.e2e_wall_s*1e6:.0f}us, "
+            f"bound {self.overhead_bound_s*1e6:.0f}us)")
+        return "\n".join(lines)
+
+
+def _table_bytes(t) -> int:
+    return int(sum(t[c].nbytes for c in t.column_names))
+
+
+_OP_NAMES = {
+    "PScan": "scan", "PFilter": "filter", "PProject": "project",
+    "PJoin": "join", "PGroupBy": "groupby", "PGroupJoin": "groupjoin",
+    "POrderByLimit": "orderby",
+}
+
+
+def op_of(node) -> str:
+    return _OP_NAMES.get(type(node).__name__, type(node).__name__.lower())
+
+
+def strategy_of(node) -> str:
+    from repro.engine import physical as P
+
+    if isinstance(node, P.PJoin):
+        return f"{node.algorithm}/{node.pattern}"
+    if isinstance(node, P.PGroupBy):
+        return node.strategy
+    if isinstance(node, P.PGroupJoin):
+        return f"phj+{node.agg_strategy}"
+    return ""
+
+
+def _with_children(node, mats):
+    """Shallow copy of a physical node with its children replaced by
+    `executor.Materialized` wrappers, so `execute` consumes precomputed
+    child results instead of recursing."""
+    kids = node.children()
+    if not kids:
+        return node
+    if len(kids) == 1:
+        return dataclasses.replace(node, child=mats[0])
+    return dataclasses.replace(node, build=mats[0], probe=mats[1])
+
+
+def trace_execute(plan, tables=None, *, iters: int = 1, warmup: int = 1,
+                  measure_e2e: bool = True):
+    """Execute `plan` with per-node timing. Returns
+    ``(table, valid_count, QueryTrace)`` — the table/count pair is
+    numerically identical to the untraced `run()` result (same operator
+    code, same static shapes; only the execution granularity differs).
+
+    Children run first and their results become traced jit arguments of
+    the parent's computation, which keeps per-node timings honest (no
+    constant folding) at the price of whole-plan fusion — see
+    `QueryTrace.overhead_bound_s` for the accounting."""
+    import jax
+
+    from repro.engine import executor
+    from repro.engine import physical as P
+
+    from .calibration import backend_fingerprint
+
+    tables = dict(tables if tables is not None else plan.catalog.tables)
+    t_begin = time.perf_counter()
+    floor = sync_floor()
+
+    def visit(node, path):
+        child_out = []
+        child_spans = []
+        for i, kid in enumerate(node.children()):
+            r, s = visit(kid, path + (i,))
+            child_out.append(r)
+            child_spans.append(s)
+        if isinstance(node, P.PScan):
+            fn = jax.jit(lambda tb: executor.execute(node, tb))
+            args = (tables,)
+            rows_in = int(tables[node.table].num_rows)
+            bytes_in = _table_bytes(tables[node.table])
+        else:
+            def fn(child_vals):
+                mats = [executor.Materialized(v) for v in child_vals]
+                return executor.execute(_with_children(node, mats), {})
+
+            fn = jax.jit(fn)
+            args = (child_out,)
+            rows_in = sum(int(c) for _, c in child_out)
+            bytes_in = sum(_table_bytes(t) + 4 for t, _ in child_out)
+        t0 = time.perf_counter() - t_begin
+        (out_t, out_c), wall = timed_call(fn, *args, iters=iters,
+                                          warmup=warmup)
+        span = Span(
+            op=op_of(node), name=node.describe(),
+            strategy=strategy_of(node), path=path,
+            predicted_s=float(node.cost), wall_s=wall,
+            rows_in=rows_in, rows_out=int(out_c),
+            bytes_in=bytes_in, bytes_out=_table_bytes(out_t) + 4,
+            t0_s=t0, children=child_spans,
+        )
+        return (out_t, out_c), span
+
+    (out_t, out_c), root = visit(plan.root, ())
+    e2e = 0.0
+    if measure_e2e:
+        # the untraced compiled plan, measured the same way — reuses (and
+        # warms) the plan's own compiled-executable cache
+        _, e2e = timed_call(lambda: executor.run(plan, tables),
+                            iters=max(iters, 1), warmup=max(warmup, 1))
+    trace = QueryTrace(
+        root=root, backend=backend_fingerprint(),
+        total_wall_s=time.perf_counter() - t_begin, e2e_wall_s=e2e,
+        sync_floor_s=floor, iters=iters, warmup=warmup,
+    )
+    return out_t, out_c, trace
