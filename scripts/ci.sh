@@ -59,6 +59,24 @@ assert all("ewma" in r and "count" in r for r in ent["residuals"].values())
 PY
 echo "ci: obs traced smoke OK (TRACE.json + CALIBRATION.json schemas)"
 
+# Fault-injection smoke (DESIGN.md §13): one forced overflow per escalation
+# ladder, one forced pallas-arm failure per fused kernel path, and one forced
+# executor failure. The run must complete with results identical to the
+# fault-free oracles AND the resilience.* counters must be non-zero — a
+# recovery path that silently didn't run is a failure.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.resilience --smoke > RESILIENCE_SMOKE.json
+python - <<'PY'
+import json
+rep = json.load(open("RESILIENCE_SMOKE.json"))
+assert rep["ok"] and not rep["failures"], rep["failures"]
+assert all(c["ok"] for c in rep["cases"]), rep["cases"]
+for name in ("resilience.ladder_escalations", "resilience.kernel_fallbacks",
+             "resilience.plan_degradations", "resilience.faults_fired"):
+    assert rep["metrics"].get(name, 0) > 0, (name, rep["metrics"])
+PY
+echo "ci: resilience fault-injection smoke OK (RESILIENCE_SMOKE.json, all counters moved)"
+
 # Smoke-scale end-to-end benchmark (engine section only): catches benchmark
 # bitrot — a benchmark that no longer runs fails CI instead of rotting.
 REPRO_BENCH_SCALE=0.02 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from . import primitives as prim
-from .hash_join import hash32
+from .hash_join import _nonempty, hash32
 from .table import KEY_SENTINEL, Table
 
 AGG_OPS = ("sum", "count", "min", "max", "mean")
@@ -88,6 +88,7 @@ def groupby_sort(
     `apply_permutation` gather — Algorithm 1's lazy transform without the
     per-column re-sort it used to cost.
     Returns (Table(key + agg columns), valid_count)."""
+    table = _nonempty(table, key)  # zero rows -> one all-sentinel row
     keys = table[key]
     sk, perm = prim.plan_sort_permutation(keys)
     boundary = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
@@ -193,6 +194,7 @@ def groupby_partition_hash(
     The combine phase runs over tile partials (<= distinct-per-tile of the
     input rows live), so for low-cardinality or skewed inputs the expensive
     pass shrinks by up to `block`x."""
+    table = _nonempty(table, key)  # zero rows -> one all-sentinel row
     keys = table[key]
     # Build partial-op plan: ops needed per output agg (+ count for mean).
     cols_ops = {}
@@ -346,6 +348,7 @@ def groupby_partition(
     here; heavy per-key duplication co-hashes regardless of fan-out, so
     skewed/duplicated inputs belong to `partition_hash` instead. Use
     `groupby_partition_checked` for an eager overflow check + escalation."""
+    table = _nonempty(table, key)  # zero rows -> one all-sentinel row
     keys = table[key]
     n = keys.shape[0]
     p_bits, row_block = _partition_layout(n, row_block, partition_bits)
@@ -471,37 +474,78 @@ def groupby_partition_checked(
     num_groups: int,
     row_block: int = PARTITION_ROW_BLOCK,
     max_extra_bits: int = 4,
+    max_attempts: int = 8,
+    with_report: bool = False,
     **kw,
 ):
-    """groupby_partition with eager overflow escalation (the phj_join_checked
-    policy): first add fan-out bits — separating co-hashed distinct groups —
-    then, if a single key's duplication still overflows (more bits cannot
-    split one key), grow the block to cover the observed maximum. Always
-    exact; the escalation is a cheap host-side histogram."""
+    """groupby_partition on the resilience ladder (DESIGN.md §13): first
+    add fan-out bits — separating co-hashed distinct groups — then, if a
+    single key's duplication still overflows (more bits cannot split one
+    key), revert the extra bits and grow the block to cover the base
+    layout's observed maximum (always the smaller geometry: splitting can
+    at best divide the max by the same 2^extra it multiplies the partition
+    count by); as a last rung, fall back to the always-exact sort
+    strategy. Each check is a cheap host-side histogram; exhaustion raises
+    `EscalationExhausted` instead of dropping partition overhang.
+
+    `with_report=True` additionally returns the `EscalationReport`."""
+    from repro.resilience import EscalationStep, Ladder
+
+    table = _nonempty(table, key)
     keys = table[key]
     # resolve the auto layout ONCE, then pin it explicitly through the
     # escalation (explicit partition_bits disables the auto-grow)
-    p_bits, row_block = _partition_layout(
+    base_bits, base_block = _partition_layout(
         keys.shape[0], row_block, kw.pop("partition_bits", None))
-    over, _, mx0 = groupby_partition_overflowed(
-        keys, row_block=row_block, partition_bits=p_bits)
-    extra = 0
-    while over and extra < max_extra_bits and p_bits + extra < 20:
-        extra += 1
-        over, _, _ = groupby_partition_overflowed(
-            keys, row_block=row_block, partition_bits=p_bits + extra)
-    rb = row_block
-    if over:
-        # more fan-out never split the heavy key, so the extra bits only
-        # multiply the P * row_block slot footprint — revert them and grow
-        # the block to the base layout's heaviest partition instead (always
-        # the smaller geometry: splitting can at best divide the max by the
-        # same 2^extra it multiplies the partition count by)
-        extra = 0
+    knobs = {"strategy": "partition", "partition_bits": base_bits,
+             "row_block": base_block}
+    base_mx: dict = {}  # heaviest base-layout partition, cached by check()
+
+    def check(kn):
+        if kn["strategy"] != "partition":
+            return True, "sort fallback (always exact)", None
+        over, _, mx = groupby_partition_overflowed(
+            keys, row_block=kn["row_block"],
+            partition_bits=kn["partition_bits"])
+        if kn["partition_bits"] == base_bits:
+            base_mx.setdefault("mx", mx)
+        return (not over,
+                f"partition rows {mx} > block {kn['row_block']}" if over
+                else "", mx)
+
+    def grow_bits(kn, diag):
+        if kn["strategy"] != "partition" or kn["partition_bits"] >= 20:
+            return None
+        return {**kn, "partition_bits": kn["partition_bits"] + 1}
+
+    def grow_block(kn, diag):
+        if kn["strategy"] != "partition":
+            return None
+        mx0 = max(base_mx.get("mx", 0), 1)
         rb = 1 << max(int(mx0 - 1).bit_length(),
-                      int(row_block - 1).bit_length())
-    return groupby_partition(table, key=key, aggs=aggs, num_groups=num_groups,
-                             row_block=rb, partition_bits=p_bits + extra, **kw)
+                      int(base_block - 1).bit_length())
+        if rb <= kn["row_block"] and kn["partition_bits"] == base_bits:
+            rb = kn["row_block"] * 2  # forced overflow: grow anyway
+        return {**kn, "partition_bits": base_bits, "row_block": rb}
+
+    def to_sort(kn, diag):
+        return {**kn, "strategy": "sort"}
+
+    ladder = Ladder("groupby_partition", [
+        EscalationStep("partition_bits", grow_bits, max_times=max_extra_bits),
+        EscalationStep("row_block", grow_block, max_times=1),
+        EscalationStep("strategy:sort", to_sort, max_times=1),
+    ], max_attempts=max_attempts)
+    report = ladder.resolve(knobs, check)
+    kn = report.final_knobs
+    if kn["strategy"] == "sort":
+        out = groupby_sort(table, key=key, aggs=aggs, num_groups=num_groups)
+    else:
+        out = groupby_partition(
+            table, key=key, aggs=aggs, num_groups=num_groups,
+            row_block=kn["row_block"], partition_bits=kn["partition_bits"],
+            **kw)
+    return (out, report) if with_report else out
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +565,7 @@ def groupby_scatter(
     the output is compacted to a dense prefix (present groups in ascending
     key order, rows >= valid_count are padding), so all strategies share
     one (Table, valid_count) contract."""
+    table = _nonempty(table, key)  # zero rows -> one all-sentinel row
     keys = table[key]
     if not jnp.issubdtype(keys.dtype, jnp.integer):
         raise TypeError(
@@ -566,6 +611,7 @@ def groupby_sort_pallas(
     a mean/count aggregate actually needs it."""
     from repro.kernels import ops as kops
 
+    table = _nonempty(table, key)  # zero rows -> one all-sentinel row
     keys = table[key]
     for op in aggs.values():
         if op not in ("sum", "mean", "count"):

@@ -52,9 +52,9 @@ import jax.numpy as jnp
 
 from . import primitives as prim
 from .groupby import AGG_OPS, group_aggregate
-from .hash_join import (BUILD_BLOCK, _digits, blocked_partitions, build_blocks,
-                        choose_partition_bits, escalate_partition_bits, phj_overflowed,
-                        probe_pk_fk)
+from .hash_join import (BUILD_BLOCK, _digits, _nonempty, blocked_partitions,
+                        build_blocks, choose_partition_bits,
+                        escalate_partition_bits, phj_overflowed, probe_pk_fk)
 from .table import KEY_SENTINEL, Table
 
 
@@ -106,14 +106,20 @@ def phj_groupjoin(
         if col not in S.column_names and col not in R.column_names:
             raise ValueError(f"agg column {col!r} in neither relation")
 
+    R = _nonempty(R, key)
+    S = _nonempty(S, key)
     p_bits = (partition_bits if partition_bits is not None
               else choose_partition_bits(R.num_rows, build_block))
     P = 1 << p_bits
 
     dig_r = _digits(R[key], p_bits, hash_keys)
     dig_s = _digits(S[key], p_bits, hash_keys)
-    perm_r, off_r, sz_r = prim.plan_partition_permutation(dig_r, P)
-    perm_s, off_s, sz_s = prim.plan_partition_permutation(dig_s, P)
+    # P + 1 partitions: sentinel rows flood the extra one (see
+    # hash_join._digits) and never reach a build block or probe pass
+    perm_r, off_r, sz_r = prim.plan_partition_permutation(dig_r, P + 1)
+    perm_s, off_s, sz_s = prim.plan_partition_permutation(dig_s, P + 1)
+    off_r, sz_r = off_r[:P], sz_r[:P]
+    off_s, sz_s = off_s[:P], sz_s[:P]
 
     kr = prim.apply_permutation(perm_r, R[key])
     ks, dig_s_part = prim.apply_permutation(perm_s, S[key], dig_s)
@@ -223,6 +229,8 @@ def groupjoin_required_groups(S: Table, *, key: str = "k", group_key: str,
     indexes the accumulator by key value and drops out-of-domain keys.
     Device-side sort/max + scalar transfer; the capacity analogue of
     `phj_overflowed`'s histogram."""
+    if S.num_rows == 0:
+        return 0
     gk = S[group_key]
     valid = S[key] != jnp.asarray(KEY_SENTINEL, S[key].dtype)
     sentinel = jnp.asarray(KEY_SENTINEL, gk.dtype)
@@ -256,28 +264,70 @@ def groupjoin_overflowed(R: Table, S: Table, *, key: str = "k",
 def groupjoin_checked(R: Table, S: Table, *, key: str = "k", group_key: str,
                       aggs: dict[str, str], num_groups: int,
                       max_extra_bits: int = 4,
-                      build_block: int = BUILD_BLOCK, **kw):
-    """phj_groupjoin with the `phj_join_checked` escalation contract,
-    extended to the accumulator: FIRST add partition bits while a build
-    co-partition overflows its padded block (`escalate_partition_bits`),
-    THEN grow the accumulator when `num_groups` would drop groups — to the
-    exact distinct-group count, or to the dense key domain for the
-    'scatter' strategy (which indexes the accumulator by key value). Both
-    checks are cheap host-side reductions; the re-run uses strictly larger
-    static shapes, so the result is exact."""
-    p_bits = escalate_partition_bits(
-        R, key=key, build_block=build_block,
-        partition_bits=kw.pop("partition_bits", None),
-        hash_keys=kw.get("hash_keys", True), max_extra_bits=max_extra_bits)
-    required = groupjoin_required_groups(
-        S, key=key, group_key=group_key,
-        agg_strategy=kw.get("agg_strategy", "sort"))
-    if required > num_groups:
-        from repro.obs import metrics  # deferred: core never needs obs otherwise
+                      build_block: int = BUILD_BLOCK, max_attempts: int = 8,
+                      with_report: bool = False, **kw):
+    """phj_groupjoin on the resilience ladder (DESIGN.md §13), covering
+    both static capacities the fused path pads to: FIRST add partition
+    bits while a build co-partition overflows its padded block, THEN grow
+    the accumulator when `num_groups` would drop groups — to the exact
+    distinct-group count (or the dense key domain for the 'scatter'
+    strategy, which indexes the accumulator by key value). Both checks are
+    cheap host-side reductions; the re-run uses strictly larger static
+    shapes, so the result is exact. Bounded: `EscalationExhausted` instead
+    of a silent lossy run.
 
-        metrics.counter("core.overflow_escalations").inc()
-        # lane-friendly growth, mirroring the engine's capacity rounding
-        num_groups = -(-required // 64) * 64
-    return phj_groupjoin(R, S, key=key, group_key=group_key, aggs=aggs,
-                         num_groups=num_groups, build_block=build_block,
-                         partition_bits=p_bits, **kw)
+    `with_report=True` additionally returns the `EscalationReport`."""
+    from repro.resilience import EscalationStep, Ladder
+
+    hash_keys = kw.get("hash_keys", True)
+    agg_strategy = kw.get("agg_strategy", "sort")
+    base_bits = kw.pop("partition_bits", None)
+    if base_bits is None:
+        base_bits = choose_partition_bits(R.num_rows, build_block)
+    knobs = {"partition_bits": base_bits, "num_groups": num_groups}
+
+    def check(kn):
+        build_ovf, _, group_ovf, required = groupjoin_overflowed(
+            R, S, key=key, group_key=group_key, num_groups=kn["num_groups"],
+            build_block=build_block, partition_bits=kn["partition_bits"],
+            hash_keys=hash_keys, agg_strategy=agg_strategy)
+        parts = []
+        if build_ovf:
+            parts.append(f"build partition > {build_block} rows")
+        if group_ovf:
+            parts.append(f"{required} groups > capacity {kn['num_groups']}")
+        return (not parts, "; ".join(parts),
+                {"build_ovf": build_ovf, "required": required})
+
+    def grow_bits(kn, diag):
+        # yields to the capacity rung when the diagnosis shows a pure
+        # accumulator overflow (more fan-out cannot create capacity)
+        if kn["partition_bits"] >= 20:
+            return None
+        if diag is not None and not diag["build_ovf"] \
+                and diag["required"] > kn["num_groups"]:
+            return None
+        return {**kn, "partition_bits": kn["partition_bits"] + 1}
+
+    def grow_capacity(kn, diag):
+        required = diag["required"] if diag else 0
+        if diag is not None and diag["build_ovf"] \
+                and required <= kn["num_groups"]:
+            return None  # capacity cannot fix a build-block overflow
+        if required > kn["num_groups"]:
+            # lane-friendly growth, mirroring the engine's capacity rounding
+            target = -(-required // 64) * 64
+        else:  # forced overflow with nothing actually wrong: double
+            target = max(64, kn["num_groups"] * 2)
+        return {**kn, "num_groups": target}
+
+    ladder = Ladder("groupjoin", [
+        EscalationStep("partition_bits", grow_bits, max_times=max_extra_bits),
+        EscalationStep("num_groups", grow_capacity, max_times=3),
+    ], max_attempts=max_attempts)
+    report = ladder.resolve(knobs, check)
+    kn = report.final_knobs
+    out = phj_groupjoin(R, S, key=key, group_key=group_key, aggs=aggs,
+                        num_groups=kn["num_groups"], build_block=build_block,
+                        partition_bits=kn["partition_bits"], **kw)
+    return (out, report) if with_report else out

@@ -58,8 +58,32 @@ def choose_partition_bits(n_build: int, build_block: int) -> int:
 
 
 def _digits(keys, p_bits, hash_keys):
+    """Partition digit per row, in [0, p_bits^2]: valid keys spread over
+    [0, P) by the hash; KEY_SENTINEL rows (masked padding from an upstream
+    operator) flood their own dedicated partition P so they can never crowd
+    valid keys out of a shared build block — without this, a join input
+    that is half padding concentrates every sentinel in one hash bucket and
+    evicts the valid keys that co-hash there (silent dropped matches)."""
     h = hash32(keys) if hash_keys else keys.astype(jnp.uint32)
-    return (h & ((1 << p_bits) - 1)).astype(jnp.int32)
+    d = (h & ((1 << p_bits) - 1)).astype(jnp.int32)
+    sentinel = keys == jnp.asarray(KEY_SENTINEL, keys.dtype)
+    return jnp.where(sentinel, 1 << p_bits, d)
+
+
+def _nonempty(table: Table, key: str) -> Table:
+    """A zero-row relation breaks the static-shape plumbing (empty
+    bincounts, (0,)-vs-(1,) boundary concats). Substitute ONE all-sentinel
+    row: the sentinel key is dropped by every probe/build/aggregate by
+    construction, so results are identical to the true empty input while
+    every intermediate keeps a non-degenerate shape."""
+    if table.num_rows:
+        return table
+    cols = {}
+    for n in table.column_names:
+        c = table[n]
+        fill = KEY_SENTINEL if n == key else 0
+        cols[n] = jnp.full((1,), fill, c.dtype)
+    return Table(cols)
 
 
 def _chunked(f, arr_len, chunk, *arrays):
@@ -108,11 +132,16 @@ def probe_pk_fk(bkeys, off_r, probe_keys, probe_digits, chunk=8192):
     co-partition. Returns (vid_r, matched), both clustered in probe order."""
 
     def body(pk, pd):
+        # sentinel rows carry digit P (their dedicated partition, which has
+        # no build block); clip to a real block — the pk != KEY_SENTINEL
+        # guard already makes every comparison for them False
+        pd = jnp.minimum(pd, bkeys.shape[0] - 1)
         cand = jnp.take(bkeys, pd, axis=0)  # (chunk, capR)
         eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
         hit = jnp.argmax(eq, axis=1).astype(jnp.int32)
         matched = jnp.any(eq, axis=1)
-        vid_r = jnp.take(off_r, pd).astype(jnp.int32) + hit
+        vid_r = jnp.take(off_r, jnp.minimum(pd, off_r.shape[0] - 1)
+                         ).astype(jnp.int32) + hit
         return vid_r, matched
 
     return _chunked(body, probe_keys.shape[0], chunk, probe_keys, probe_digits)
@@ -122,6 +151,7 @@ def probe_counts(bkeys, probe_keys, probe_digits, chunk=8192):
     """m:n: number of build matches per probe row."""
 
     def body(pk, pd):
+        pd = jnp.minimum(pd, bkeys.shape[0] - 1)  # sentinel digit P -> any block
         cand = jnp.take(bkeys, pd, axis=0)
         eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
         return jnp.sum(eq, axis=1).astype(jnp.int32)
@@ -135,7 +165,7 @@ def probe_kth_match(bkeys, off_r, probe_keys, probe_digits, rows, ranks, chunk=8
 
     def body(row, rank):
         pk = jnp.take(probe_keys, row)
-        pd = jnp.take(probe_digits, row)
+        pd = jnp.minimum(jnp.take(probe_digits, row), bkeys.shape[0] - 1)
         cand = jnp.take(bkeys, pd, axis=0)
         eq = (cand == pk[:, None]) & (pk[:, None] != KEY_SENTINEL)
         csum = jnp.cumsum(eq.astype(jnp.int32), axis=1)
@@ -173,6 +203,9 @@ def phj_join(
     """
     if out_size is None:
         out_size = S.num_rows if mode == "pk_fk" else S.num_rows * 2
+    out_size = max(out_size, 1)
+    R = _nonempty(R, key)
+    S = _nonempty(S, key)
     r_pay = [n for n in R.column_names if n != key]
     s_pay = [n for n in S.column_names if n != key]
     p_bits = (
@@ -186,20 +219,23 @@ def phj_join(
     dig_s = _digits(S[key], p_bits, hash_keys)
     # One-permutation transform plan (multi-pass radix semantics; determinism
     # by construction — §4.3's requirement): the partition is planned once
-    # per side and every column it touches costs exactly one gather.
-    perm_r, off_r, sz_r = prim.plan_partition_permutation(dig_r, P)
-    perm_s, off_s, sz_s = prim.plan_partition_permutation(dig_s, P)
+    # per side and every column it touches costs exactly one gather. P + 1
+    # partitions: the extra one swallows sentinel rows (see _digits) and
+    # never gets a build block or a probe pass.
+    perm_r, off_r, sz_r = prim.plan_partition_permutation(dig_r, P + 1)
+    perm_s, off_s, sz_s = prim.plan_partition_permutation(dig_s, P + 1)
 
     kr = prim.apply_permutation(perm_r, R[key])
     ks, dig_s_part = prim.apply_permutation(perm_s, S[key], dig_s)
 
-    bkeys, _, overflow = build_blocks(kr, off_r, sz_r, build_block)
+    bkeys, _, overflow = build_blocks(kr, off_r[:P], sz_r[:P], build_block)
 
     if mode == "pk_fk":
         if probe_impl == "pallas":
             from repro.kernels import ops as _kops
 
-            vid_r, matched = _kops.hash_probe(bkeys, off_r, ks, off_s, sz_s, "pallas")
+            vid_r, matched = _kops.hash_probe(bkeys, off_r[:P], ks,
+                                              off_s[:P], sz_s[:P], "pallas")
         else:
             vid_r, matched = probe_pk_fk(bkeys, off_r, ks, dig_s_part, probe_chunk)
         vid_s = jnp.arange(ks.shape[0], dtype=jnp.int32)
@@ -254,7 +290,8 @@ def phj_overflowed(R: Table, *, key: str = "k", build_block: int = 256,
     p_bits = (partition_bits if partition_bits is not None
               else choose_partition_bits(R.num_rows, build_block))
     dig = _digits(R[key], p_bits, hash_keys)
-    sizes = jnp.bincount(dig, length=1 << p_bits)
+    # the sentinel partition P is allowed to overflow (it never gets a block)
+    sizes = jnp.bincount(dig, length=(1 << p_bits) + 1)[:-1]
     return bool(jnp.max(sizes) > build_block), p_bits
 
 
@@ -286,12 +323,57 @@ def escalate_partition_bits(R: Table, *, key: str = "k",
 
 
 def phj_join_checked(R: Table, S: Table, *, key: str = "k", max_extra_bits: int = 4,
-                     build_block: int = 256, **kw):
-    """phj_join with automatic fan-out escalation on build-partition
-    overflow (`escalate_partition_bits`)."""
-    p_bits = escalate_partition_bits(
-        R, key=key, build_block=build_block,
-        partition_bits=kw.pop("partition_bits", None),
-        hash_keys=kw.get("hash_keys", True), max_extra_bits=max_extra_bits)
-    return phj_join(R, S, key=key, build_block=build_block,
-                    partition_bits=p_bits, **kw)
+                     build_block: int = 256, max_attempts: int = 8,
+                     with_report: bool = False, **kw):
+    """phj_join on the resilience ladder (DESIGN.md §13): add partition
+    bits while any build co-partition would overflow its padded block (the
+    paper's multi-pass fan-out escalation); when more bits cannot help —
+    one key's duplicates co-hash no matter the fan-out — fall back to
+    sort-merge, which is exact for any multiplicity. The old loop returned
+    escalated-but-still-overflowing bits and silently dropped matches;
+    the ladder either converges or raises `EscalationExhausted`.
+
+    `with_report=True` additionally returns the `EscalationReport`."""
+    from repro.resilience import EscalationStep, Ladder
+
+    hash_keys = kw.get("hash_keys", True)
+    base_bits = kw.pop("partition_bits", None)
+    if base_bits is None:
+        base_bits = choose_partition_bits(R.num_rows, build_block)
+    knobs = {"algorithm": "phj", "partition_bits": base_bits,
+             "build_block": build_block}
+
+    def check(kn):
+        if kn["algorithm"] != "phj":
+            return True, "smj fallback (exact for any multiplicity)", None
+        over, _ = phj_overflowed(R, key=key, build_block=kn["build_block"],
+                                 partition_bits=kn["partition_bits"],
+                                 hash_keys=hash_keys)
+        return (not over,
+                f"build partition > {kn['build_block']} rows" if over else "",
+                None)
+
+    def grow_bits(kn, diag):
+        if kn["algorithm"] != "phj" or kn["partition_bits"] >= 20:
+            return None
+        return {**kn, "partition_bits": kn["partition_bits"] + 1}
+
+    def to_smj(kn, diag):
+        return {**kn, "algorithm": "smj"}
+
+    ladder = Ladder("phj", [
+        EscalationStep("partition_bits", grow_bits, max_times=max_extra_bits),
+        EscalationStep("strategy:smj", to_smj, max_times=1),
+    ], max_attempts=max_attempts)
+    report = ladder.resolve(knobs, check)
+    kn = report.final_knobs
+    if kn["algorithm"] == "smj":
+        from .sort_merge import smj_join  # deferred: no import cycle
+
+        smj_kw = {k: v for k, v in kw.items()
+                  if k in ("pattern", "out_size", "mode", "find_impl")}
+        out = smj_join(R, S, key=key, **smj_kw)
+    else:
+        out = phj_join(R, S, key=key, build_block=kn["build_block"],
+                       partition_bits=kn["partition_bits"], **kw)
+    return (out, report) if with_report else out

@@ -15,6 +15,8 @@ clustering GFTR relies on (`primitives.compact` is stable).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 from typing import Mapping
 
@@ -23,11 +25,37 @@ import jax.numpy as jnp
 
 from repro.core import group_aggregate, join, phj_groupjoin
 from repro.core import primitives as prim
+from repro.core.groupby import groupby_partition_checked
+from repro.core.groupjoin import groupjoin_checked
+from repro.core.hash_join import phj_join_checked
 from repro.core.table import KEY_SENTINEL, Table
 from repro.obs import metrics
+from repro.resilience import escalation, faults
 
 from . import physical as P
 from .logical import FILTER_OP_FNS
+
+# Programming errors must surface, not trigger a degraded re-plan: a retried
+# plan would either hit the same bug or silently mask it (DESIGN.md §13).
+_NON_DEGRADABLE = (TypeError, KeyError, AttributeError, IndexError)
+
+# Checked mode: capacity-sensitive operators run through their resilience
+# ladders (phj_join_checked / groupby_partition_checked / groupjoin_checked)
+# instead of the plain drivers, so a plan whose capacities were misestimated
+# escalates and records EscalationReports rather than silently truncating.
+# Ladders read overflow flags host-side, so this is only legal in EAGER
+# execution — `run(jit=False)` and the tracer's validation pass set it; the
+# jitted fast path never does (its protection is the degrade-once retry).
+_CHECKED = contextvars.ContextVar("repro_executor_checked", default=False)
+
+
+@contextlib.contextmanager
+def checked_mode():
+    token = _CHECKED.set(True)
+    try:
+        yield
+    finally:
+        _CHECKED.reset(token)
 
 
 class Materialized:
@@ -97,10 +125,16 @@ def _join(node: P.PJoin, tables):
     # core.join wants one shared key name: align build's key to the probe's
     if node.build_key != node.probe_key:
         bt = bt.rename({node.build_key: node.probe_key})
-    out, count = join(
-        bt, pt, key=node.probe_key, algorithm=node.algorithm,
-        pattern=node.pattern, out_size=node.capacity, mode=node.mode,
-    )
+    if _CHECKED.get() and node.algorithm == "phj":
+        out, count = phj_join_checked(
+            bt, pt, key=node.probe_key, pattern=node.pattern,
+            out_size=node.capacity, mode=node.mode,
+        )
+    else:
+        out, count = join(
+            bt, pt, key=node.probe_key, algorithm=node.algorithm,
+            pattern=node.pattern, out_size=node.capacity, mode=node.mode,
+        )
     if node.build_key != node.probe_key:
         # restore the equal-valued alias column (schema contract)
         out = out.with_columns(**{node.build_key: out[node.probe_key]})
@@ -110,9 +144,14 @@ def _join(node: P.PJoin, tables):
 def _group_by(node: P.PGroupBy, tables):
     t, count = execute(node.child, tables)
     t = _mask_key(t, count, node.key)
+    sel = t.select((node.key,) + tuple(c for c, _ in node.aggs))
+    if _CHECKED.get() and node.strategy == "partition":
+        return groupby_partition_checked(
+            sel, key=node.key, aggs=dict(node.aggs),
+            num_groups=node.capacity, **dict(node.agg_kw),
+        )
     return group_aggregate(
-        t.select((node.key,) + tuple(c for c, _ in node.aggs)),
-        key=node.key, aggs=dict(node.aggs), num_groups=node.capacity,
+        sel, key=node.key, aggs=dict(node.aggs), num_groups=node.capacity,
         strategy=node.strategy, **dict(node.agg_kw),
     )
 
@@ -133,12 +172,20 @@ def _group_join(node: P.PGroupJoin, tables):
     b_need = dict.fromkeys([key] + [c for c in agg_cols if c in bt])
     p_need = dict.fromkeys([key, node.probe_group_key]
                            + [c for c in agg_cols if c in pt])
-    out, count = phj_groupjoin(
-        bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
-        group_key=node.probe_group_key, aggs=dict(node.aggs),
-        num_groups=node.capacity, agg_strategy=node.agg_strategy,
-        agg_kw=dict(node.agg_kw) or None,
-    )
+    if _CHECKED.get():
+        out, count = groupjoin_checked(
+            bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
+            group_key=node.probe_group_key, aggs=dict(node.aggs),
+            num_groups=node.capacity, agg_strategy=node.agg_strategy,
+            agg_kw=dict(node.agg_kw) or None,
+        )
+    else:
+        out, count = phj_groupjoin(
+            bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
+            group_key=node.probe_group_key, aggs=dict(node.aggs),
+            num_groups=node.capacity, agg_strategy=node.agg_strategy,
+            agg_kw=dict(node.agg_kw) or None,
+        )
     if node.group_key != node.probe_group_key:
         # logical schema names the group column after the GroupBy key (the
         # equal-valued build-key alias); restore it
@@ -268,18 +315,46 @@ def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
     device-synced wall times, rows/bytes, and predicted-vs-measured
     residuals. Tracing is strictly opt-in: the untraced path below is the
     exact pre-trace code path (no Span allocation, identical whole-plan
-    jaxpr — pinned by tests/test_obs.py)."""
+    jaxpr — pinned by tests/test_obs.py).
+
+    Graceful degradation (DESIGN.md §13): if the plan raises at trace or
+    run time — an `EscalationExhausted` ladder, a kernel arm that failed
+    past its xla fallback, a fault-injected `raise:executor.run` — the
+    executor re-plans ONCE via `physical.degrade_plan` (doubled
+    capacities, sort/smj strategies) and reruns. Programming errors
+    (`_NON_DEGRADABLE`) and failures of an already-degraded plan re-raise
+    untouched."""
     if trace:
         from repro.obs.trace import trace_execute
 
         return trace_execute(plan, tables, iters=trace_iters,
                              warmup=trace_warmup)
     tables = dict(tables if tables is not None else plan.catalog.tables)
-    if not jit:
-        return execute(plan.root, tables)
-    if plan.compiled is None:
-        plan.compiled = jax.jit(lambda tb: execute(plan.root, tb))
-        metrics.counter("engine.plans_compiled").inc()
-    else:
-        metrics.counter("engine.plan_cache_hits").inc()
-    return plan.compiled(tables)
+
+    def attempt(p: "P.PhysicalPlan"):
+        faults.check_site("executor.run")
+        if not jit:
+            # eager runs are the diagnostic path: capacity-sensitive nodes
+            # go through their resilience ladders and record reports
+            with checked_mode():
+                return execute(p.root, tables)
+        if p.compiled is None:
+            p.compiled = jax.jit(lambda tb: execute(p.root, tb))
+            metrics.counter("engine.plans_compiled").inc()
+        else:
+            metrics.counter("engine.plan_cache_hits").inc()
+        return p.compiled(tables)
+
+    try:
+        return attempt(plan)
+    except _NON_DEGRADABLE:
+        raise
+    except Exception as e:  # noqa: BLE001 — everything else degrades once
+        if plan.degraded:
+            raise
+        reason = f"{type(e).__name__}: {e}"[:120]
+        if plan.degraded_plan is None:
+            plan.degraded_plan = P.degrade_plan(plan, reason)
+        metrics.counter("resilience.plan_degradations").inc()
+        escalation.record_degradation("executor", reason)
+        return attempt(plan.degraded_plan)

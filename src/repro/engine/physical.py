@@ -287,6 +287,13 @@ class PhysicalPlan:
     catalog: "S.Catalog"
     total_cost: float
     compiled: object = dataclasses.field(default=None, repr=False, compare=False)
+    # "" normally; "DEGRADED[reason]" when executor.run re-planned this plan
+    # after an escalation exhaustion / kernel failure (DESIGN.md §13)
+    degraded: str = ""
+    # the one-shot degraded re-plan, cached so repeated run() calls reuse
+    # its compiled executable instead of re-degrading
+    degraded_plan: "PhysicalPlan | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def explain(self, verify: bool = False, tables: Mapping | None = None,
                 actuals=None) -> str:
@@ -302,6 +309,8 @@ class PhysicalPlan:
         measured time and the measured/modeled residual, flagging >2x
         divergences — the measured side of priced-vs-compiled (§12)."""
         lines = [f"physical plan  predicted_total={self.total_cost*1e6:.0f}us"]
+        if self.degraded:
+            lines.append(f"  {self.degraded}")
         plan_audit = None
         if verify:
             from . import executor
@@ -344,6 +353,12 @@ class PhysicalPlan:
                 walk(k, prefix + ext, i == len(kids) - 1, klab, path + (i,))
 
         walk(self.root, "", True)
+        # escalation footer: ladder reports recorded while `actuals` ran
+        # (trace_execute windows repro.resilience's report ring), so a plan
+        # whose checked drivers escalated shows the attempt path next to
+        # the measured times they cost
+        for rep in getattr(actuals, "escalations", ()) or ():
+            lines.append(f"  escalation: {rep.summary()}")
         rendered = "\n".join(lines)
         if plan_audit is not None and plan_audit.violations:
             first = plan_audit.violations[0]
@@ -1002,6 +1017,44 @@ class Optimizer:
             known_unique=child.known_unique, child=child, key=node.key,
             limit=node.limit, descending=node.descending,
         )
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (DESIGN.md §13): the executor's one-shot re-plan
+# ---------------------------------------------------------------------------
+def degrade_plan(plan: PhysicalPlan, reason: str) -> PhysicalPlan:
+    """A conservative clone of `plan` for executor.run's single retry after
+    an escalation exhaustion or operator failure: every data-bearing
+    capacity doubles (lane-rounded — wrong estimates are the common failure
+    mode), group-bys and fused group-joins fall to the always-exact 'sort'
+    strategy, and PHJ joins fall to sort-merge (exact for any key
+    multiplicity). The clone shares the catalog but never the compiled
+    executable, and is annotated `DEGRADED[reason]` for explain()."""
+
+    def clone(node: PhysNode) -> PhysNode:
+        changes: dict = {}
+        if isinstance(node, (PFilter, PProject, PGroupBy, POrderByLimit)):
+            changes["child"] = clone(node.child)
+        elif isinstance(node, (PJoin, PGroupJoin)):
+            changes["build"] = clone(node.build)
+            changes["probe"] = clone(node.probe)
+        # OrderByLimit's capacity IS the limit (growing it would return
+        # extra rows); Scan/Project capacities mirror their input
+        if isinstance(node, (PFilter, PJoin, PGroupBy, PGroupJoin)):
+            changes["capacity"] = -(-node.capacity * 2 // 64) * 64
+        if isinstance(node, PGroupBy) and node.strategy != "sort":
+            changes.update(strategy="sort", agg_kw=(),
+                           rationale=node.rationale + "; degraded -> sort")
+        if isinstance(node, PGroupJoin) and node.agg_strategy != "sort":
+            changes.update(agg_strategy="sort", agg_kw=())
+        if isinstance(node, PJoin) and node.algorithm == "phj":
+            changes.update(algorithm="smj",
+                           rationale=node.rationale + "; degraded -> smj")
+        return dataclasses.replace(node, **changes) if changes else node
+
+    return PhysicalPlan(root=clone(plan.root), catalog=plan.catalog,
+                        total_cost=plan.total_cost,
+                        degraded=f"DEGRADED[{reason}]")
 
 
 def optimize(plan: L.Plan, catalog: "S.Catalog", *,

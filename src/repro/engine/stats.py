@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hash_join import hash32
+from repro.resilience import faults
 from repro.core.planner import JoinStats
 from repro.core.table import Table
 
@@ -103,6 +104,9 @@ def estimate_distinct(col: jax.Array) -> float:
     if v >= B:  # saturated (cannot happen with B >= 2n, but stay safe)
         return float(n)
     est = -B * np.log1p(-v / B)
+    # deterministic corruption hook (REPRO_FAULTS=estimates:...): 1.0 when
+    # no fault is active, so production estimates are untouched
+    est *= faults.estimate_factor("distinct")
     return float(min(max(est, 1.0), n))
 
 

@@ -17,6 +17,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.resilience import faults
+
 from . import ref
 from .common import ceil_div
 from .gather import gather_windowed_pallas
@@ -51,24 +53,57 @@ def __getattr__(name):  # keep the old constant's spelling working
 KEY_SENTINEL = -1
 
 
+def _pallas_arm(site: str, pallas_fn, xla_fn):
+    """Run a dispatch's pallas arm with graceful degradation: if the arm
+    raises (real kernel failure, unsupported backend, or an armed
+    `REPRO_FAULTS=pallas:<site>` injection), fall back to the bit-identical
+    XLA arm and record the event (DESIGN.md §13's pallas -> xla chain; the
+    dense-jnp reference IS the xla arm here, so the chain terminates).
+
+    Zero-overhead contract: with no faults active and a healthy kernel this
+    is one host-side call through `pallas_fn` — the try/except and the
+    fault check contribute nothing to the traced jaxpr."""
+    try:
+        faults.check_pallas(site)
+        return pallas_fn()
+    except Exception as e:  # noqa: BLE001 — any arm failure degrades
+        from repro.obs import metrics  # deferred: kernels stay obs-free
+        from repro.resilience import escalation
+
+        metrics.counter("resilience.kernel_fallbacks").inc()
+        metrics.counter(f"resilience.kernel_fallbacks.{site}").inc()
+        escalation.record_degradation(
+            f"kernels.{site}", f"pallas arm failed: {type(e).__name__}: {e}")
+        return xla_fn()
+
+
 # ---------------------------------------------------------------------------
 # histogram / partition ranks
 # ---------------------------------------------------------------------------
 def histogram(digits: jax.Array, num_bins: int, impl: str = "pallas") -> jax.Array:
     if impl == "pallas":
-        return histogram_pallas(digits, num_bins, interpret=None)
+        return _pallas_arm(
+            "histogram",
+            lambda: histogram_pallas(digits, num_bins, interpret=None),
+            lambda: ref.histogram(digits, num_bins))
     return ref.histogram(digits, num_bins)
+
+
+def _partition_ranks_xla(digits, num_bins):
+    dest = ref.partition_ranks(digits, num_bins)
+    sz = ref.histogram(digits, num_bins)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sz)[:-1].astype(jnp.int32)])
+    return dest, off, sz
 
 
 def partition_ranks(digits: jax.Array, num_bins: int, impl: str = "pallas"):
     """dest position per element (stable partition)."""
     if impl == "pallas":
-        dest, off, sz = partition_ranks_pallas(digits, num_bins, interpret=None)
-        return dest, off, sz
-    dest = ref.partition_ranks(digits, num_bins)
-    sz = ref.histogram(digits, num_bins)
-    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sz)[:-1].astype(jnp.int32)])
-    return dest, off, sz
+        return _pallas_arm(
+            "partition_ranks",
+            lambda: partition_ranks_pallas(digits, num_bins, interpret=None),
+            lambda: _partition_ranks_xla(digits, num_bins))
+    return _partition_ranks_xla(digits, num_bins)
 
 
 # ---------------------------------------------------------------------------
@@ -92,11 +127,20 @@ def partition_plan(digits: jax.Array, num_partitions: int, *, carry=(),
     Both arms return bit-identical results — the stable partition
     permutation is unique (tests/test_permutation.py pins the parity)."""
     if impl == "pallas":
-        return partition_plan_pallas(
-            digits, num_partitions, carry=carry, max_pass_bits=max_pass_bits,
-            pass_impl=pass_impl, interpret=None)
+        return _pallas_arm(
+            "partition_plan",
+            lambda: partition_plan_pallas(
+                digits, num_partitions, carry=carry,
+                max_pass_bits=max_pass_bits, pass_impl=pass_impl,
+                interpret=None),
+            lambda: _partition_plan_xla(digits, num_partitions, carry,
+                                        max_pass_bits))
     if impl != "xla":
         raise ValueError(f"unknown partition plan impl {impl!r}")
+    return _partition_plan_xla(digits, num_partitions, carry, max_pass_bits)
+
+
+def _partition_plan_xla(digits, num_partitions, carry, max_pass_bits):
     n = digits.shape[0]
     digits = digits.astype(jnp.int32)
     iota = jnp.arange(n, dtype=jnp.int32)
@@ -131,9 +175,16 @@ def sort_plan(keys: jax.Array, impl: str = "xla"):
     sign-biased key pattern (int32 keys), for radix-hardware parity and
     fully sort-free pipelines."""
     if impl == "radix":
-        return sort_plan_radix(keys, interpret=None)
+        return _pallas_arm(
+            "sort_plan",
+            lambda: sort_plan_radix(keys, interpret=None),
+            lambda: _sort_plan_xla(keys))
     if impl != "xla":
         raise ValueError(f"unknown sort plan impl {impl!r}")
+    return _sort_plan_xla(keys)
+
+
+def _sort_plan_xla(keys):
     iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
     sk, perm = jax.lax.sort((keys, iota), num_keys=1, is_stable=True)
     return sk, perm
@@ -178,10 +229,12 @@ def merge_lower_bound(
         fits = bool(jnp.all(coarse_hi < (win_idx + 2) * window_rows))
         if not fits:
             return ref.lower_bound(build_sorted, probe_sorted)
-    return lower_bound_windowed_pallas(
-        build_sorted, probe_sorted, win_idx,
-        window_rows=window_rows, tile=tile, interpret=None,
-    )
+    return _pallas_arm(
+        "merge_lower_bound",
+        lambda: lower_bound_windowed_pallas(
+            build_sorted, probe_sorted, win_idx,
+            window_rows=window_rows, tile=tile, interpret=None),
+        lambda: ref.lower_bound(build_sorted, probe_sorted))
 
 
 # ---------------------------------------------------------------------------
@@ -200,27 +253,37 @@ def hash_probe(
     Returns (vid_r, matched) aligned with probe_keys_part order."""
     P, cap_r = bkeys.shape
     n = probe_keys_part.shape[0]
-    if impl == "xla":
-        # reconstruct per-row partition ids from the layout
+
+    def xla_arm():
+        # reconstruct per-row partition ids from the layout. Rows past the
+        # last real partition (a sentinel partition's overhang) still map to
+        # P - 1; their keys are KEY_SENTINEL so they can never match.
         row = jnp.arange(n, dtype=jnp.int32)
         part = jnp.clip(
             jnp.searchsorted(probe_off, row, side="right").astype(jnp.int32) - 1, 0, P - 1
         )
         return ref.hash_probe_blocks(bkeys, off_r, probe_keys_part, part)
-    cap_s = cap_r
-    max_blocks = ceil_div(n, cap_s) + P
-    pk, part, src_idx = layout_probe_blocks(probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
-    vid, hit = hash_probe_pallas(bkeys, off_r, pk, part, interpret=None)
-    # scatter sub-block results back to partitioned probe order
-    flat_src = src_idx.reshape(-1)
-    ok = flat_src >= 0
-    vid_out = jnp.full((n,), -1, jnp.int32).at[jnp.where(ok, flat_src, n)].set(
-        vid.reshape(-1), mode="drop"
-    )
-    hit_out = jnp.zeros((n,), jnp.int32).at[jnp.where(ok, flat_src, n)].set(
-        hit.reshape(-1), mode="drop"
-    )
-    return vid_out, hit_out.astype(bool)
+
+    if impl == "xla":
+        return xla_arm()
+
+    def pallas_arm():
+        cap_s = cap_r
+        max_blocks = ceil_div(n, cap_s) + P
+        pk, part, src_idx = layout_probe_blocks(probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
+        vid, hit = hash_probe_pallas(bkeys, off_r, pk, part, interpret=None)
+        # scatter sub-block results back to partitioned probe order
+        flat_src = src_idx.reshape(-1)
+        ok = flat_src >= 0
+        vid_out = jnp.full((n,), -1, jnp.int32).at[jnp.where(ok, flat_src, n)].set(
+            vid.reshape(-1), mode="drop"
+        )
+        hit_out = jnp.zeros((n,), jnp.int32).at[jnp.where(ok, flat_src, n)].set(
+            hit.reshape(-1), mode="drop"
+        )
+        return vid_out, hit_out.astype(bool)
+
+    return _pallas_arm("hash_probe", pallas_arm, xla_arm)
 
 
 # ---------------------------------------------------------------------------
@@ -283,7 +346,7 @@ def groupjoin_probe_agg(
         bvals = jnp.zeros((P, 1, cap_r), jnp.float32)
     if pv_part is None:
         pv_part = jnp.zeros((1, n), jnp.float32)
-    if impl == "xla":
+    def xla_arm():
         # reference arm: plain probe, then per-row values + segmented combine
         row = jnp.arange(n, dtype=jnp.int32)
         part = jnp.clip(
@@ -305,26 +368,33 @@ def groupjoin_probe_agg(
         keys_o, sums_o, counts_o, found = _combine_group_partials(
             gke, cols, matched.astype(jnp.int32), num_groups, gk_part.dtype)
         return keys_o, sums_o[:0] if count_only else sums_o, counts_o, found
-    cap_s = cap_r
-    max_blocks = ceil_div(n, cap_s) + P
-    pk, part, src_idx = layout_probe_blocks(
-        probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
-    safe = jnp.clip(src_idx, 0, n - 1)
-    pad = src_idx >= 0
-    gkb = jnp.where(pad, jnp.take(gk_part, safe), KEY_SENTINEL)
-    # (B, Cp, capS): every probe value column laid out with the same block map
-    pvb = jnp.where(pad[:, None, :],
-                    jnp.take(pv_part.astype(jnp.float32), safe, axis=1
-                             ).transpose(1, 0, 2), 0.0)
-    pkeys, psums, pcounts = probe_agg_pallas(
-        bkeys, bvals, pk, gkb, pvb, part,
-        col_sides=tuple(col_sides), interpret=None)
-    C = len(col_sides)
-    keys_o, sums_o, counts_o, found = _combine_group_partials(
-        pkeys.reshape(-1),
-        [psums[:, c, :].reshape(-1) for c in range(C)],
-        pcounts.reshape(-1), num_groups, gk_part.dtype)
-    return keys_o, sums_o[:0] if count_only else sums_o, counts_o, found
+
+    if impl == "xla":
+        return xla_arm()
+
+    def pallas_arm():
+        cap_s = cap_r
+        max_blocks = ceil_div(n, cap_s) + P
+        pk, part, src_idx = layout_probe_blocks(
+            probe_keys_part, probe_off, probe_sz, cap_s, max_blocks)
+        safe = jnp.clip(src_idx, 0, n - 1)
+        pad = src_idx >= 0
+        gkb = jnp.where(pad, jnp.take(gk_part, safe), KEY_SENTINEL)
+        # (B, Cp, capS): every probe value column laid out with the same block map
+        pvb = jnp.where(pad[:, None, :],
+                        jnp.take(pv_part.astype(jnp.float32), safe, axis=1
+                                 ).transpose(1, 0, 2), 0.0)
+        pkeys, psums, pcounts = probe_agg_pallas(
+            bkeys, bvals, pk, gkb, pvb, part,
+            col_sides=tuple(col_sides), interpret=None)
+        C = len(col_sides)
+        keys_o, sums_o, counts_o, found = _combine_group_partials(
+            pkeys.reshape(-1),
+            [psums[:, c, :].reshape(-1) for c in range(C)],
+            pcounts.reshape(-1), num_groups, gk_part.dtype)
+        return keys_o, sums_o[:0] if count_only else sums_o, counts_o, found
+
+    return _pallas_arm("groupjoin_probe_agg", pallas_arm, xla_arm)
 
 
 # ---------------------------------------------------------------------------
@@ -354,10 +424,16 @@ def clustered_gather(
         if not spans_ok:
             out = jnp.take(src, safe_idx, axis=0)
             return jnp.where(idx >= 0, out, 0)
-    out = gather_windowed_pallas(
-        src, safe_idx, win_idx, window_rows=window_rows, tile=tile, interpret=None
-    )
-    return jnp.where(idx >= 0, out, 0)
+
+    def pallas_arm():
+        out = gather_windowed_pallas(
+            src, safe_idx, win_idx, window_rows=window_rows, tile=tile,
+            interpret=None)
+        return jnp.where(idx >= 0, out, 0)
+
+    return _pallas_arm(
+        "clustered_gather", pallas_arm,
+        lambda: jnp.where(idx >= 0, jnp.take(src, safe_idx, axis=0), 0))
 
 
 # ---------------------------------------------------------------------------
@@ -374,7 +450,11 @@ def groupby_sorted_sum(
     """Group sums over key-sorted rows: Pallas tile partials + host combine.
     Returns (group_keys, group_sums, count)."""
     if impl == "pallas":
-        pk, ps, pc = segsum_partials_pallas(sorted_keys, values, tile=tile, interpret=None)
+        pk, ps, pc = _pallas_arm(
+            "groupby_sorted_sum",
+            lambda: segsum_partials_pallas(sorted_keys, values, tile=tile,
+                                           interpret=None),
+            lambda: ref.segsum_partials(sorted_keys, values, tile))
     else:
         pk, ps, pc = ref.segsum_partials(sorted_keys, values, tile)
     # combine partials: they are key-sorted except sentinel slots; re-sort.

@@ -2,7 +2,14 @@
 
 The runtime scoreboard the serving layer inherits: plans compiled,
 plan-cache hits, overflow escalations, contract audits — anything a
-long-lived process wants to report without attaching a profiler. Metrics
+long-lived process wants to report without attaching a profiler. The
+resilience layer (DESIGN.md §13) reports here under `resilience.*`:
+`ladder_attempts` / `ladder_escalations` / `ladder_exhausted` (checked
+operator ladders), `kernel_fallbacks` (+ `.{site}`) for pallas→XLA arm
+fallbacks, `plan_degradations` (executor degrade-once),
+`serve_shed` / `serve_retries` / `serve_evictions` /
+`serve_deadline_evictions` (serving), `degradations` and `faults_fired`
+(fault injection). Metrics
 are plain Python (no jax import, no locks beyond the GIL's atomicity for
 `+=` on ints): incrementing a counter costs one dict lookup + an add, so
 instrumented hot paths stay hot.

@@ -123,6 +123,10 @@ class QueryTrace:
     sync_floor_s: float  # per-dispatch sync floor at trace time
     iters: int = 1
     warmup: int = 1
+    # EscalationReports recorded while this trace ran (repro.resilience's
+    # report ring, windowed by sequence number) — explain(actuals=trace)
+    # renders these as its escalation footer
+    escalations: tuple = ()
 
     def spans(self) -> list:
         out = []
@@ -164,6 +168,7 @@ class QueryTrace:
             "overhead_bound_s": self.overhead_bound_s,
             "iters": self.iters, "warmup": self.warmup,
             "nodes": [s.as_dict() for s in self.spans()],
+            "escalations": [r.as_dict() for r in self.escalations],
         }
 
     def to_json(self, path: str) -> None:
@@ -252,7 +257,7 @@ def _with_children(node, mats):
 
 
 def trace_execute(plan, tables=None, *, iters: int = 1, warmup: int = 1,
-                  measure_e2e: bool = True):
+                  measure_e2e: bool = True, validate_capacity: bool = True):
     """Execute `plan` with per-node timing. Returns
     ``(table, valid_count, QueryTrace)`` — the table/count pair is
     numerically identical to the untraced `run()` result (same operator
@@ -261,17 +266,27 @@ def trace_execute(plan, tables=None, *, iters: int = 1, warmup: int = 1,
     Children run first and their results become traced jit arguments of
     the parent's computation, which keeps per-node timings honest (no
     constant folding) at the price of whole-plan fusion — see
-    `QueryTrace.overhead_bound_s` for the accounting."""
+    `QueryTrace.overhead_bound_s` for the accounting.
+
+    With ``validate_capacity=True`` (the default) the trace finishes with
+    one untimed eager pass under `executor.checked_mode()`: every
+    capacity-sensitive node re-runs through its resilience ladder, so a
+    plan whose capacities were misestimated records `EscalationReport`s —
+    surfaced on `QueryTrace.escalations` and rendered by
+    `explain(actuals=trace)` (DESIGN.md §13)."""
     import jax
 
     from repro.engine import executor
     from repro.engine import physical as P
+
+    from repro.resilience import escalation
 
     from .calibration import backend_fingerprint
 
     tables = dict(tables if tables is not None else plan.catalog.tables)
     t_begin = time.perf_counter()
     floor = sync_floor()
+    esc_since = escalation.current_seq()
 
     def visit(node, path):
         child_out = []
@@ -308,6 +323,12 @@ def trace_execute(plan, tables=None, *, iters: int = 1, warmup: int = 1,
         return (out_t, out_c), span
 
     (out_t, out_c), root = visit(plan.root, ())
+    if validate_capacity:
+        # untimed: ladder checks are host-side histograms plus (only on
+        # escalation) a larger-shape re-run; results are discarded — the
+        # pass exists for its EscalationReports
+        with executor.checked_mode():
+            executor.execute(plan.root, tables)
     e2e = 0.0
     if measure_e2e:
         # the untraced compiled plan, measured the same way — reuses (and
@@ -318,5 +339,6 @@ def trace_execute(plan, tables=None, *, iters: int = 1, warmup: int = 1,
         root=root, backend=backend_fingerprint(),
         total_wall_s=time.perf_counter() - t_begin, e2e_wall_s=e2e,
         sync_floor_s=floor, iters=iters, warmup=warmup,
+        escalations=tuple(escalation.recent_reports(esc_since)),
     )
     return out_t, out_c, trace

@@ -1,0 +1,31 @@
+"""repro.resilience — escalation runtime, fault injection, degradation.
+
+Three cooperating layers (DESIGN.md §13):
+
+  * `escalation` — the declarative bounded-attempt `Ladder` engine behind
+    every `*_checked` driver; structured `EscalationReport`s, typed
+    `EscalationExhausted`, `resilience.*` metrics;
+  * `faults` — deterministic, seedable fault injection (`REPRO_FAULTS` /
+    `inject()`): forced overflows, corrupted estimates, pallas-arm
+    failures — zero overhead (identical jaxpr) when inactive;
+  * graceful degradation lives at its consumers: `kernels/ops.py`
+    (pallas -> xla arm fallback), `engine/executor.run` (one re-plan with
+    escalated capacities, `DEGRADED[reason]`), `serve/engine.py`
+    (timeout, bounded retry, load shedding).
+
+`python -m repro.resilience --smoke` forces one overflow per ladder and
+one pallas failure per dispatch and asserts results match the fault-free
+run (wired into scripts/ci.sh).
+"""
+from .escalation import (Attempt, EscalationExhausted, EscalationReport,
+                         EscalationStep, Ladder, current_seq,
+                         recent_degradations, recent_reports,
+                         record_degradation, record_report)
+from .faults import ENV_VAR, FaultInjected, FaultPlan, FaultSpec, inject, parse
+
+__all__ = [
+    "Attempt", "EscalationExhausted", "EscalationReport", "EscalationStep",
+    "Ladder", "current_seq", "recent_degradations", "recent_reports",
+    "record_degradation", "record_report",
+    "ENV_VAR", "FaultInjected", "FaultPlan", "FaultSpec", "inject", "parse",
+]

@@ -1,0 +1,148 @@
+"""`python -m repro.resilience --smoke` — fault-injection smoke gate.
+
+Exercises the three resilience layers under deterministic faults
+(DESIGN.md §13) and exits non-zero if any degraded run diverges from its
+fault-free oracle:
+
+  ladders  — one forced overflow at attempt 0 per escalation ladder
+             (phj, groupjoin, groupby_partition): the ladder must
+             escalate, converge, and reproduce the oracle's valid rows;
+  kernels  — `pallas:*` forces every pallas arm in kernels/ops.py to
+             raise: each dispatch must fall back to its XLA arm and
+             reproduce the oracle bit-for-bit;
+  engine   — `raise:executor.run@0` forces one executor failure: the
+             degrade-once re-plan must reproduce the oracle.
+
+Escalated knobs change row order (partition bits) and padded shape
+(accumulator capacity), never the multiset of valid rows — so runs are
+compared as canonicalized valid rows: sorted tuples over sorted columns.
+
+The smoke also asserts the `resilience.*` counters moved: a smoke that
+passes without firing any fault is a broken smoke (scripts/ci.sh greps
+the JSON for this).
+
+Usage: python -m repro.resilience --smoke [--json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def _canon(table, count):
+    """Valid rows, order- and shape-insensitive: sorted row tuples over
+    sorted column names (all smoke payloads are integer-valued)."""
+    n = int(count)
+    cols = sorted(table.column_names)
+    mats = [np.asarray(table[c])[:n] for c in cols]
+    return tuple(cols), sorted(zip(*[m.tolist() for m in mats]))
+
+
+def _check(name, oracle, got, failures):
+    if oracle == got:
+        return {"case": name, "ok": True}
+    failures.append(name)
+    return {"case": name, "ok": False}
+
+
+def smoke() -> int:
+    import jax.numpy as jnp
+
+    from repro.core import Table
+    from repro.core.groupby import groupby_partition_checked
+    from repro.core.groupjoin import groupjoin_checked
+    from repro.core.hash_join import phj_join_checked
+    from repro.data import relgen
+    from repro.engine import Catalog, optimize, scan
+    from repro.obs import metrics
+    from repro.resilience import faults
+
+    rng = np.random.default_rng(7)
+    R = Table({"k": jnp.asarray(np.arange(512, dtype=np.int32)),
+               "v": jnp.asarray(rng.integers(0, 100, 512).astype(np.int32))})
+    S = Table({"k": jnp.asarray(rng.integers(0, 512, 2048).astype(np.int32)),
+               "w": jnp.asarray(rng.integers(0, 9, 2048).astype(np.int32))})
+
+    failures: list[str] = []
+    cases = []
+
+    # -- ladders: forced overflow at attempt 0, one per ladder --------------
+    oracle = _canon(*phj_join_checked(R, S, key="k"))
+    with faults.inject("overflow:phj@0"):
+        out, rep = phj_join_checked(R, S, key="k", with_report=True)
+    entry = _check("ladder.phj", oracle, _canon(*out), failures)
+    entry.update(escalated=rep.escalated, attempts=len(rep.attempts))
+    cases.append(entry)
+
+    gj_kw = dict(key="k", group_key="k", aggs={"w": "sum"}, num_groups=512)
+    oracle = _canon(*groupjoin_checked(R, S, **gj_kw))
+    with faults.inject("overflow:groupjoin@0"):
+        out, rep = groupjoin_checked(R, S, with_report=True, **gj_kw)
+    entry = _check("ladder.groupjoin", oracle, _canon(*out), failures)
+    entry.update(escalated=rep.escalated, attempts=len(rep.attempts))
+    cases.append(entry)
+
+    gb_kw = dict(key="k", aggs={"w": "sum"}, num_groups=512)
+    oracle = _canon(*groupby_partition_checked(S, **gb_kw))
+    with faults.inject("overflow:groupby_partition@0"):
+        out, rep = groupby_partition_checked(S, with_report=True, **gb_kw)
+    entry = _check("ladder.groupby_partition", oracle, _canon(*out), failures)
+    entry.update(escalated=rep.escalated, attempts=len(rep.attempts))
+    cases.append(entry)
+
+    # -- kernels: every pallas arm raises, xla fallback must be exact -------
+    before = metrics.counter("resilience.kernel_fallbacks").value
+    oracle = _canon(*phj_join_checked(R, S, key="k"))
+    with faults.inject("pallas:*"):
+        got = _canon(*phj_join_checked(R, S, key="k"))
+    cases.append(_check("kernels.phj_all_pallas_down", oracle, got, failures))
+    oracle = _canon(*groupjoin_checked(R, S, **gj_kw))
+    with faults.inject("pallas:*"):
+        got = _canon(*groupjoin_checked(R, S, **gj_kw))
+    cases.append(_check("kernels.groupjoin_all_pallas_down", oracle, got,
+                        failures))
+    if metrics.counter("resilience.kernel_fallbacks").value <= before:
+        failures.append("kernels.no_fallback_fired")
+
+    # -- engine: one forced executor failure, degrade-once re-plan ----------
+    w = relgen.JoinWorkload("t", 1000, 4000, 2, 1, match_ratio=1.0)
+    er, es = relgen.generate(w)
+    cat = Catalog({"R": er, "S": es})
+    q = scan("R").join(scan("S"), key="k").group_by("k", s1="sum")
+    oracle = _canon(*optimize(q, cat, measure_profile=False).run())
+    plan = optimize(q, cat, measure_profile=False)
+    with faults.inject("raise:executor.run@0"):
+        got = _canon(*plan.run())
+    entry = _check("engine.degrade_once", oracle, got, failures)
+    entry["degraded"] = bool(plan.degraded_plan is not None
+                             and plan.degraded_plan.degraded)
+    if not entry["degraded"]:
+        failures.append("engine.no_degradation")
+    cases.append(entry)
+
+    snap = {k: v for k, v in sorted(metrics.snapshot().items())
+            if k.startswith("resilience.")}
+    for name in ("resilience.ladder_escalations",
+                 "resilience.kernel_fallbacks",
+                 "resilience.plan_degradations",
+                 "resilience.faults_fired"):
+        if not snap.get(name):
+            failures.append(f"counter_zero.{name}")
+
+    result = {"ok": not failures, "failures": failures, "cases": cases,
+              "metrics": snap}
+    print(json.dumps(result, indent=2, sort_keys=True))
+    return 0 if not failures else 1
+
+
+def main(argv: list[str]) -> int:
+    if "--smoke" in argv:
+        return smoke()
+    print(__doc__)
+    return 0 if argv in ([], ["--help"]) else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

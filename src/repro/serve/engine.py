@@ -13,10 +13,20 @@ static.
 
 Single-host reference implementation with the same step function the
 sharded serve path uses (launch/serve.py builds it with a mesh).
+
+Resilience (DESIGN.md §13): admission sheds when the queue is full
+(`max_queue`), per-request deadlines evict overdue work, and a failing
+decode step is retried with backoff; if it keeps failing, the
+most-recently-admitted slot is evicted (requeued while it has retry
+budget, failed alone once it doesn't) so one poisoned query cannot take
+down the batch. The cache is only ever reassigned on a successful step,
+so a failed step leaves every surviving slot's state untouched.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
 from typing import Callable
 
 import jax
@@ -25,6 +35,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+from repro.obs import metrics
+from repro.resilience import escalation, faults
 
 
 def _reset_slot(cache, pristine, axes, slot: int):
@@ -49,14 +61,28 @@ class Request:
     max_tokens: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # absolute engine tick by which the request must finish ("" = none);
+    # overdue requests are evicted from slot or queue with error="deadline"
+    deadline_ticks: int | None = None
+    # why the request finished without completing: "", "shed", "deadline",
+    # "poisoned"
+    error: str = ""
+    # re-admissions allowed after this request's slot is evicted for a
+    # persistent step failure before it is failed alone
+    retries_left: int = 1
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 2, batch_stub=None,
-                 dtype=jnp.float32, step_fn: Callable | None = None):
+                 dtype=jnp.float32, step_fn: Callable | None = None,
+                 max_queue: int | None = None, step_retries: int = 2,
+                 retry_backoff_s: float = 0.005):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_len, self.eos_id = max_batch, max_len, eos_id
+        self.max_queue = max_queue
+        self.step_retries = step_retries
+        self.retry_backoff_s = retry_backoff_s
         stub = batch_stub or {}
         self.cache = M.init_cache(cfg, params, max_batch, max_len, stub, dtype)
         self._pristine = jax.tree_util.tree_map(jnp.copy, self.cache)
@@ -65,19 +91,41 @@ class ServeEngine:
         self.slot_pos = np.zeros(max_batch, np.int32)  # per-slot position
         self.tokens = np.zeros(max_batch, np.int32)
         self.queue: list[Request] = []
+        self.tick = 0  # absolute engine tick (deadline clock)
+        # admission order, newest = the eviction candidate on a poisoned step
+        self._admit_seq = itertools.count()
+        self._slot_seq = [-1] * max_batch
+        self._hold_admission = False  # one-tick pause after an eviction
         self._step = step_fn or jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
         )
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # load shedding: fail fast at admission instead of letting the
+            # backlog grow past what the engine can drain
+            req.error, req.done = "shed", True
+            metrics.counter("resilience.serve_shed").inc()
+            escalation.record_degradation(
+                "serve", f"shed rid={req.rid}: queue full ({self.max_queue})")
+            return
         self.queue.append(req)
 
     def _admit(self):
+        # after an eviction, let the surviving batch run one tick before
+        # refilling: readmitting into a still-failing batch would burn the
+        # requeued request's retry budget on someone else's poison (an
+        # empty batch can't be poisoned, so admission always resumes there)
+        if self._hold_admission:
+            self._hold_admission = False
+            if any(r is not None for r in self.slot_req):
+                return
         for i in range(self.max_batch):
             if self.slot_req[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[i] = req
+                self._slot_seq[i] = next(self._admit_seq)
                 # fresh slot: position 0, pristine cache rows (no leakage
                 # from the previous occupant)
                 self.slot_pos[i] = 0
@@ -87,16 +135,69 @@ class ServeEngine:
                 req._prompt_cursor = 1
                 self.tokens[i] = req.prompt[0]
 
+    # -- resilience sweeps ----------------------------------------------------
+    def _overdue(self, req: Request | None) -> bool:
+        return (req is not None and req.deadline_ticks is not None
+                and self.tick >= req.deadline_ticks)
+
+    def _sweep_deadlines(self):
+        for i, req in enumerate(self.slot_req):
+            if self._overdue(req):
+                req.error, req.done = "deadline", True
+                self.slot_req[i] = None
+                metrics.counter("resilience.serve_deadline_evictions").inc()
+        overdue = [r for r in self.queue if self._overdue(r)]
+        if overdue:
+            self.queue = [r for r in self.queue if not self._overdue(r)]
+            for req in overdue:
+                req.error, req.done = "deadline", True
+                metrics.counter("resilience.serve_deadline_evictions").inc()
+
+    def _evict_poisoned(self, err: Exception):
+        """A step failed past its retry budget: evict the most recently
+        admitted slot — the request whose arrival changed the batch — and
+        requeue it if it has retry budget left, else fail it alone."""
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        i = max(live, key=lambda j: self._slot_seq[j])
+        req = self.slot_req[i]
+        self.slot_req[i] = None
+        self._hold_admission = True
+        metrics.counter("resilience.serve_evictions").inc()
+        escalation.record_degradation(
+            "serve", f"evicted rid={req.rid}: {type(err).__name__}: {err}")
+        if req.retries_left > 0:
+            req.retries_left -= 1
+            req.out.clear()  # partial output from the failed run is void
+            self.queue.append(req)
+        else:
+            req.error, req.done = "poisoned", True
+
     # -- one engine tick ------------------------------------------------------
     def step(self):
+        self.tick += 1
+        self._sweep_deadlines()
         self._admit()
         live = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not live:
             return False
-        logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.slot_pos),
-        )
+        # bounded retry with backoff; `self.cache` is reassigned only from a
+        # successful call, so a failed step leaves all slot state untouched
+        for retry in range(self.step_retries + 1):
+            try:
+                faults.check_site("serve.step")
+                logits, cache = self._step(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.slot_pos),
+                )
+                break
+            except Exception as e:  # noqa: BLE001 — isolate, don't crash
+                if retry < self.step_retries:
+                    metrics.counter("resilience.serve_retries").inc()
+                    time.sleep(self.retry_backoff_s * (1 << retry))
+                    continue
+                self._evict_poisoned(e)
+                return True  # the surviving slots run again next tick
+        self.cache = cache
         logits = np.asarray(logits)
         for i in live:
             self.slot_pos[i] += 1
