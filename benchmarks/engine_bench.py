@@ -14,6 +14,7 @@ import jax
 
 from repro.data import relgen
 from repro.engine import Catalog, optimize, scan
+from repro.obs import metrics
 
 from .common import N_BASE, emit, time_fn
 
@@ -55,7 +56,8 @@ def _time_plans_interleaved(tagged_plans, iters=7, warmup=2):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(tables))
             ts.append(time.perf_counter() - t0)
-    return {tag: sorted(ts)[len(ts) // 2] * 1e6 for tag, _, _, ts in runs}
+    return {tag: metrics.percentiles(ts, (50,))["p50"] * 1e6
+            for tag, _, _, ts in runs}
 
 
 def tpc_star_query():

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Table, group_aggregate
+from repro.obs import metrics
 
 from .common import N_BASE, emit, fingerprint, time_fn
 
@@ -104,7 +105,8 @@ def partition_sweep():
                 t0 = time.perf_counter()
                 jax.block_until_ready(fns[strat](t))
                 samples[strat].append((time.perf_counter() - t0) * 1e6)
-        us_by = {s: sorted(v)[len(v) // 2] for s, v in samples.items()}
+        us_by = {s: metrics.percentiles(v, (50,))["p50"]
+                 for s, v in samples.items()}
         for strat in strats:
             us = us_by[strat]
             model_us = predict_groupby_time(n, 1, strat) * 1e6

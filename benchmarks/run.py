@@ -11,6 +11,9 @@ Machine-readable perf trajectories are written next to the CSV output
 them: ``BENCH_groupby.json`` (``groupby/*``), ``BENCH_joins.json``
 (``fig*``/``table*`` join sections), ``BENCH_groupjoin.json``
 (``groupjoin/*`` fused-path sections) — each ``{name: us_per_call}``.
+The serving trajectory ``BENCH_serve.json`` (warm p50/p99 + throughput +
+degradation counters) is written by ``python -m repro.serve --chaos``,
+not by this driver — see DESIGN.md §14.
 
 Scale with REPRO_BENCH_SCALE (default 1.0 ~ 262k-row unit; the paper's GPU
 runs use 2^27 rows — same code, larger constant)."""

@@ -130,3 +130,37 @@ for kind in ("/fused/residual", "/unfused/residual"):
     assert all(rows[k] > 0 for k in keys), (kind, keys)
 PY
 echo "ci: smoke-scale groupjoin benchmark OK (BENCH_groupjoin.json + fingerprints)"
+
+# Smoke-scale chaos/soak gate (DESIGN.md §14): the query-serving runtime
+# under every fault family. Delivered results must be bit-identical to
+# fault-free oracles, failures confined to the faulted signature, and the
+# breaker/saturation counters consistent with the injected faults. Leaves
+# BENCH_serve.json (warm p50/p99 + throughput) as the serving trajectory.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.serve --chaos --smoke > /dev/null
+test -s BENCH_serve.json
+python - <<'PY'
+import json
+rep = json.load(open("BENCH_serve.json"))
+assert rep["ok"] and not rep["failures"], rep["failures"]
+base = rep["baseline"]
+for key in ("p50_s", "p95_s", "p99_s", "throughput_qps"):
+    assert base[key] > 0, (key, base)
+assert base["plan_cache_hits"] > base["plans_compiled"], base
+for fam, f in rep["families"].items():
+    assert f["wrong_results"] == 0 and f["contaminated"] == 0, (fam, f)
+    assert f["confinement"], (fam, "no confinement evidence")
+# breaker counters must match the injected faults: hard failures open and
+# then recover the breaker; compile-time pallas faults degrade without it
+fams = rep["families"]
+assert fams["raise"]["counters"]["qserve.failed"] == fams["raise"]["expected_failed"] > 0
+assert fams["raise"]["counters"]["qserve.breaker_opens"] >= 1
+assert fams["raise"]["counters"]["qserve.breaker_closes"] >= 1
+assert fams["pallas"]["counters"]["resilience.kernel_fallbacks"] > 0
+assert fams["pallas"]["counters"].get("qserve.breaker_opens", 0) == 0
+assert fams["estimates"]["counters"]["qserve.saturations"] > 0
+assert fams["overflow"]["counters"]["resilience.ladder_escalations"] > 0
+assert rep["pressure"]["shed"] == 6 and rep["pressure"]["deadline"] == 2
+assert rep["pressure"]["rejected"] == 2
+PY
+echo "ci: smoke-scale serve chaos soak OK (BENCH_serve.json, all families clean)"

@@ -58,6 +58,17 @@ def checked_mode():
         _CHECKED.reset(token)
 
 
+def _can_check(*arrays) -> bool:
+    """Checked mode is armed AND the inputs are concrete. The ladders'
+    overflow checks are host-side bool()s on device scalars, impossible on
+    tracers — an eager `run(jit=False)` wrapped in an OUTER jax.jit (the
+    benchmarks do this to time the interpreted plan as one executable)
+    must fall back to the plain drivers: the identical computation the
+    jit path compiles, protected by the degrade-once retry instead."""
+    return _CHECKED.get() and not any(
+        isinstance(a, jax.core.Tracer) for a in arrays)
+
+
 class Materialized:
     """Pseudo plan node wrapping an already-computed ``(Table, count)``
     pair. The per-node tracer (repro.obs.trace) substitutes these for a
@@ -86,46 +97,56 @@ def _mask_key(table: Table, count, key: str) -> Table:
     return table.with_columns(**{key: masked})
 
 
-def execute(node: P.PhysNode, tables: Mapping[str, Table]):
-    """Interpret the plan bottom-up. Returns (Table, valid_count)."""
+def execute(node: P.PhysNode, tables: Mapping[str, Table], counts=None):
+    """Interpret the plan bottom-up. Returns (Table, valid_count).
+
+    `counts` (optional ``{table_name: valid_count}``) is the serving
+    layer's capacity-bucketing hook (DESIGN.md §14): tables padded up to a
+    shared capacity bucket flow through with their TRUE valid counts as
+    traced scalars, so one compiled executable serves every dataset that
+    pads to the same bucket. Without it, a scan's whole table is valid —
+    the one-shot contract every existing call site relies on."""
     if isinstance(node, Materialized):
         return node.value
     if isinstance(node, P.PScan):
         t = tables[node.table]
+        if counts is not None and node.table in counts:
+            return t, jnp.asarray(counts[node.table], jnp.int32)
         return t, jnp.asarray(t.num_rows, jnp.int32)
     if isinstance(node, P.PFilter):
-        return _filter(node, tables)
+        return _filter(node, tables, counts)
     if isinstance(node, P.PProject):
-        t, count = execute(node.child, tables)
+        t, count = execute(node.child, tables, counts)
         return t.select(node.columns), count
     if isinstance(node, P.PJoin):
-        return _join(node, tables)
+        return _join(node, tables, counts)
     if isinstance(node, P.PGroupBy):
-        return _group_by(node, tables)
+        return _group_by(node, tables, counts)
     if isinstance(node, P.PGroupJoin):
-        return _group_join(node, tables)
+        return _group_join(node, tables, counts)
     if isinstance(node, P.POrderByLimit):
-        return _order_by(node, tables)
+        return _order_by(node, tables, counts)
     raise TypeError(f"unknown physical node {type(node).__name__}")
 
 
-def _filter(node: P.PFilter, tables):
-    t, count = execute(node.child, tables)
+def _filter(node: P.PFilter, tables, counts=None):
+    t, count = execute(node.child, tables, counts)
     mask = FILTER_OP_FNS[node.op](t[node.column], node.value) & _valid_mask(t, count)
     names = t.column_names
     outs, new_count = prim.compact(mask, [t[n] for n in names], node.capacity)
     return Table(dict(zip(names, outs))), new_count
 
 
-def _join(node: P.PJoin, tables):
-    bt, b_count = execute(node.build, tables)
-    pt, p_count = execute(node.probe, tables)
+def _join(node: P.PJoin, tables, counts=None):
+    bt, b_count = execute(node.build, tables, counts)
+    pt, p_count = execute(node.probe, tables, counts)
     bt = _mask_key(bt, b_count, node.build_key)
     pt = _mask_key(pt, p_count, node.probe_key)
     # core.join wants one shared key name: align build's key to the probe's
     if node.build_key != node.probe_key:
         bt = bt.rename({node.build_key: node.probe_key})
-    if _CHECKED.get() and node.algorithm == "phj":
+    if node.algorithm == "phj" and _can_check(bt[node.probe_key],
+                                              pt[node.probe_key]):
         out, count = phj_join_checked(
             bt, pt, key=node.probe_key, pattern=node.pattern,
             out_size=node.capacity, mode=node.mode,
@@ -141,11 +162,11 @@ def _join(node: P.PJoin, tables):
     return out, count
 
 
-def _group_by(node: P.PGroupBy, tables):
-    t, count = execute(node.child, tables)
+def _group_by(node: P.PGroupBy, tables, counts=None):
+    t, count = execute(node.child, tables, counts)
     t = _mask_key(t, count, node.key)
     sel = t.select((node.key,) + tuple(c for c, _ in node.aggs))
-    if _CHECKED.get() and node.strategy == "partition":
+    if node.strategy == "partition" and _can_check(sel[node.key]):
         return groupby_partition_checked(
             sel, key=node.key, aggs=dict(node.aggs),
             num_groups=node.capacity, **dict(node.agg_kw),
@@ -156,13 +177,13 @@ def _group_by(node: P.PGroupBy, tables):
     )
 
 
-def _group_join(node: P.PGroupJoin, tables):
+def _group_join(node: P.PGroupJoin, tables, counts=None):
     """Fused join + grouped aggregation: the probe's matches feed the
     accumulator directly (core.groupjoin), so only the key, group-key, and
     aggregate-input columns are ever touched — the join output never
     exists."""
-    bt, b_count = execute(node.build, tables)
-    pt, p_count = execute(node.probe, tables)
+    bt, b_count = execute(node.build, tables, counts)
+    pt, p_count = execute(node.probe, tables, counts)
     bt = _mask_key(bt, b_count, node.build_key)
     pt = _mask_key(pt, p_count, node.probe_key)
     key = node.probe_key
@@ -172,7 +193,7 @@ def _group_join(node: P.PGroupJoin, tables):
     b_need = dict.fromkeys([key] + [c for c in agg_cols if c in bt])
     p_need = dict.fromkeys([key, node.probe_group_key]
                            + [c for c in agg_cols if c in pt])
-    if _CHECKED.get():
+    if _can_check(bt[key], pt[key]):
         out, count = groupjoin_checked(
             bt.select(tuple(b_need)), pt.select(tuple(p_need)), key=key,
             group_key=node.probe_group_key, aggs=dict(node.aggs),
@@ -193,8 +214,8 @@ def _group_join(node: P.PGroupJoin, tables):
     return out, count
 
 
-def _order_by(node: P.POrderByLimit, tables):
-    t, count = execute(node.child, tables)
+def _order_by(node: P.POrderByLimit, tables, counts=None):
+    t, count = execute(node.child, tables, counts)
     k = t[node.key]
     if node.descending:
         # bitwise complement reverses integer order without the INT_MIN
@@ -304,11 +325,18 @@ def audit(plan: "P.PhysicalPlan",
 
 def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
         *, jit: bool = True, trace: bool = False, trace_iters: int = 1,
-        trace_warmup: int = 1):
+        trace_warmup: int = 1, counts=None):
     """Execute a PhysicalPlan. `tables` defaults to the catalog's; pass new
     same-shape tables to reuse one compiled plan across datasets. The jitted
     executor is cached on the plan, so repeated `run()` calls trace and
     compile once.
+
+    `counts` ({table_name: valid_count}) enables capacity bucketing
+    (DESIGN.md §14): the counts ride as traced int32 scalars into a
+    SEPARATE cached executable (`plan.compiled_bucketed`), so one compiled
+    plan serves every dataset padded to its capacity buckets — the
+    count-free `plan.compiled` artifact and its jaxpr (pinned by
+    tests/test_obs.py) are untouched.
 
     With ``trace=True`` the plan runs node by node under the span tracer
     (repro.obs.trace) and returns ``(table, count, QueryTrace)`` — per-node
@@ -325,6 +353,9 @@ def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
     (`_NON_DEGRADABLE`) and failures of an already-degraded plan re-raise
     untouched."""
     if trace:
+        if counts is not None:
+            raise ValueError("trace=True does not support counts= (the "
+                             "span tracer materializes per-node inputs)")
         from repro.obs.trace import trace_execute
 
         return trace_execute(plan, tables, iters=trace_iters,
@@ -337,7 +368,16 @@ def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
             # eager runs are the diagnostic path: capacity-sensitive nodes
             # go through their resilience ladders and record reports
             with checked_mode():
-                return execute(p.root, tables)
+                return execute(p.root, tables, counts)
+        if counts is not None:
+            if p.compiled_bucketed is None:
+                p.compiled_bucketed = jax.jit(
+                    lambda tb, ct: execute(p.root, tb, ct))
+                metrics.counter("engine.plans_compiled").inc()
+            else:
+                metrics.counter("engine.plan_cache_hits").inc()
+            ct = {k: jnp.asarray(v, jnp.int32) for k, v in counts.items()}
+            return p.compiled_bucketed(tables, ct)
         if p.compiled is None:
             p.compiled = jax.jit(lambda tb: execute(p.root, tb))
             metrics.counter("engine.plans_compiled").inc()

@@ -287,6 +287,14 @@ class PhysicalPlan:
     catalog: "S.Catalog"
     total_cost: float
     compiled: object = dataclasses.field(default=None, repr=False, compare=False)
+    # count-parameterized executable for the serving layer's capacity
+    # bucketing (DESIGN.md §14): same plan, but scan valid-counts arrive as
+    # traced int32 scalars so one compilation serves any dataset padded to
+    # this plan's capacity buckets. Cached separately so the count-free
+    # `compiled` artifact (and its jaxpr, pinned by tests/test_obs.py)
+    # never changes shape.
+    compiled_bucketed: object = dataclasses.field(
+        default=None, repr=False, compare=False)
     # "" normally; "DEGRADED[reason]" when executor.run re-planned this plan
     # after an escalation exhaustion / kernel failure (DESIGN.md §13)
     degraded: str = ""
@@ -367,15 +375,17 @@ class PhysicalPlan:
 
     def run(self, tables: Mapping | None = None, *, jit: bool = True,
             trace: bool = False, trace_iters: int = 1,
-            trace_warmup: int = 1):
+            trace_warmup: int = 1, counts=None):
         """Execute over `tables` (default: the catalog's). Returns
         (Table, valid_count) — or (Table, valid_count, QueryTrace) with
-        ``trace=True`` (per-node spans, see repro.obs.trace)."""
+        ``trace=True`` (per-node spans, see repro.obs.trace). `counts`
+        ({table: valid_count}) activates the bucketed executable — see
+        executor.run."""
         from . import executor
 
         return executor.run(self, tables, jit=jit, trace=trace,
                             trace_iters=trace_iters,
-                            trace_warmup=trace_warmup)
+                            trace_warmup=trace_warmup, counts=counts)
 
 
 # ---------------------------------------------------------------------------

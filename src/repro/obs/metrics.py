@@ -9,7 +9,13 @@ operator ladders), `kernel_fallbacks` (+ `.{site}`) for pallas→XLA arm
 fallbacks, `plan_degradations` (executor degrade-once),
 `serve_shed` / `serve_retries` / `serve_evictions` /
 `serve_deadline_evictions` (serving), `degradations` and `faults_fired`
-(fault injection). Metrics
+(fault injection). The relational query server (DESIGN.md §14) reports
+under `qserve.*`: `submitted` / `completed` / `shed` / `rejected` /
+`deadline_evictions` / `failed` (request outcomes), `plans_compiled` /
+`plan_cache_hits` (signature cache), `fast_runs` / `fast_failures` /
+`safe_runs` / `safe_escalations` / `saturations` (execution paths), and
+`breaker_opens` / `breaker_probes` / `breaker_closes` (circuit
+breakers). Metrics
 are plain Python (no jax import, no locks beyond the GIL's atomicity for
 `+=` on ints): incrementing a counter costs one dict lookup + an add, so
 instrumented hot paths stay hot.
@@ -41,13 +47,39 @@ class Counter:
         return self.value
 
 
+# Percentiles need retained observations; cap the buffer so a long-lived
+# server's histograms stay O(1) memory. At the cap, every other retained
+# sample is dropped and the keep-stride doubles — a deterministic (no RNG)
+# systematic sample that stays uniformly spread over the whole stream.
+SAMPLE_CAP = 4096
+
+
+def percentiles(values, pcts=(50, 95, 99)) -> dict:
+    """Nearest-rank percentiles over raw values: ``{"p50": ..., ...}``.
+    Shared by Histogram.summary() and anything holding its own latency
+    list (BENCH writers); benches should stop hand-rolling medians."""
+    out = {}
+    s = sorted(float(v) for v in values)
+    for p in pcts:
+        key = f"p{p:g}"
+        if not s:
+            out[key] = 0.0
+            continue
+        rank = max(int(-(-len(s) * p // 100)), 1)  # ceil, 1-based
+        out[key] = s[min(rank, len(s)) - 1]
+    return out
+
+
 @dataclasses.dataclass
 class Histogram:
-    """Streaming summary of an observed quantity (count/sum/min/max/last).
+    """Streaming summary of an observed quantity (count/sum/min/max/last)
+    plus a bounded sample buffer for percentile export.
 
-    No buckets: the consumers here (CLI tables, BENCH_*.json rows) want the
-    moments, and a full histogram would force a bucket-boundary choice on
-    every metric. `mean` is derived."""
+    No buckets: the consumers here (CLI tables, BENCH_*.json rows) want
+    moments and a few percentiles, and a full histogram would force a
+    bucket-boundary choice on every metric. `mean` is derived; percentiles
+    are nearest-rank over the retained samples (exact until SAMPLE_CAP
+    observations, a deterministic stride-thinned approximation after)."""
 
     name: str
     count: int = 0
@@ -55,6 +87,8 @@ class Histogram:
     min: float = float("inf")
     max: float = float("-inf")
     last: float = 0.0
+    samples: list = dataclasses.field(default_factory=list, repr=False)
+    stride: int = 1  # keep every stride-th observation (doubles at the cap)
 
     def observe(self, x: float) -> None:
         x = float(x)
@@ -63,10 +97,27 @@ class Histogram:
         self.min = x if x < self.min else self.min
         self.max = x if x > self.max else self.max
         self.last = x
+        if (self.count - 1) % self.stride == 0:
+            self.samples.append(x)
+            if len(self.samples) >= SAMPLE_CAP:
+                self.samples = self.samples[::2]
+                self.stride *= 2
 
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
+
+    def percentile(self, p: float) -> float:
+        return percentiles(self.samples, (p,))[f"p{p:g}"]
+
+    def summary(self, pcts=(50, 95, 99)) -> dict:
+        """Moments + percentiles, JSON-ready — the BENCH_serve.json /
+        ServeEngine latency-report shape."""
+        out = {"count": self.count, "mean": self.mean,
+               "min": self.min if self.count else 0.0,
+               "max": self.max if self.count else 0.0}
+        out.update(percentiles(self.samples, pcts))
+        return out
 
     def as_value(self):
         if not self.count:

@@ -47,6 +47,16 @@ env var)::
     with faults.inject("overflow:groupjoin@0"):
         ...
 
+Named `raise:` sites are open-ended — any host-side `check_site(name)`
+call is targetable. The query-serving runtime (DESIGN.md §14) exposes
+``qserve.plan`` (first-admission planning of a signature, inside
+QueryServer._ensure_entry) and ``qserve.execute`` (consulted once per
+execution attempt: occurrence 0 is the fast attempt, occurrence 1 the
+same-request safe fallback, so ``raise:qserve.execute@0`` fails only the
+fast path while ``raise:qserve.execute`` fails the request outright).
+The serve/chaos.py soak drives whole fault families through these plus
+per-request ``overflow:*`` / ``pallas:*`` / ``estimates:*`` specs.
+
 Zero-overhead contract: every injection site is host-side Python executed
 at TRACE time; when no faults are active each hook returns immediately
 (one module-level attribute check + an env lookup) and contributes

@@ -1,1 +1,15 @@
-"""Decode-serving engine (continuous batching over the decode step)."""
+"""Serving layer: decode serving (engine.py) and relational query serving
+(query.py — compiled-plan cache with capacity bucketing, cost-priced
+admission, per-signature circuit breakers; chaos.py is its soak harness,
+DESIGN.md §14)."""
+
+from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.query import (  # noqa: F401
+    CircuitBreaker,
+    CompiledEntry,
+    QueryRequest,
+    QueryServer,
+    bucket_rows,
+    pad_table,
+    plan_signature,
+)

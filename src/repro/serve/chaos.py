@@ -1,0 +1,376 @@
+"""Chaos/soak harness for the query-serving runtime (DESIGN.md §14).
+
+`python -m repro.serve --chaos` drives hundreds of mixed queries — PK-FK
+joins, grouped aggregations, fused group-joins, and filter+top-k over
+`data/relgen.py` workloads — through a `QueryServer` five times:
+
+  baseline    no faults. Every request must complete on the fast path;
+              its canonicalized result becomes the query's oracle (spot
+              cross-checked against independent one-shot engine runs),
+              and its warm latencies become the p50/p95/p99 + throughput
+              baseline written to BENCH_serve.json.
+  overflow    `overflow:phj@0` on every join-shaped query (the first two
+              also fail their fast attempt via `raise:qserve.execute@0`,
+              tripping the breaker): quarantined joins must climb the phj
+              escalation ladder on the safe path and still match their
+              oracles; the half-open probe must close the breaker.
+  pallas      `pallas:*` on every group-join-shaped query: the signature
+              compiles with every pallas arm down (xla fallbacks), zero
+              failures, zero breaker activity, oracle-identical results.
+  raise       `raise:qserve.execute` (every occurrence) on the first four
+              group-by-shaped queries: they must fail ALONE (fast and
+              safe), open the breaker, and the clean remainder must
+              recover through the half-open probe back to the fast path.
+  estimates   `estimates:/32` on every group-by-shaped query: the first
+              one plans the signature with 32x-too-small cardinalities,
+              poisoning the cached plan. Saturation detection must catch
+              the silent truncation, the safe path must escalate
+              `degrade_plan` levels until results fit, and every result
+              must still match its oracle.
+
+After each fault pass the harness asserts the blast radius: failures
+confined to the faulted signature, every untargeted request fast-path and
+oracle-identical (zero contamination), untargeted warm p99 within 2x of
+the fault-free baseline, and the `qserve.*` / `resilience.*` counter
+deltas consistent with the injected faults (a fault family that fires
+nothing is a broken family). A final pressure pass pins the admission
+machinery: exact shed counts at a full queue, exact deadline evictions,
+and cost-based rejection under a tiny `max_price_s`.
+
+All chaos payloads are integers, so canonicalized results (sorted valid
+rows over sorted columns) are bit-identical across every execution
+strategy a breaker or ladder can pick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.data import relgen
+from repro.engine import stats as S
+from repro.engine.logical import scan
+from repro.engine.physical import optimize
+from repro.obs import metrics
+from repro.serve.query import QueryRequest, QueryServer
+
+SHAPES = ("join", "groupby", "groupjoin", "topk")
+FAMILY_TARGETS = {"overflow": "join", "pallas": "groupjoin",
+                  "raise": "groupby", "estimates": "groupby"}
+FAMILY_SPECS = {
+    # (spec for the first `breaker_threshold` targeted queries,
+    #  spec for the rest). `raise:qserve.execute@0` fails only the fast
+    # attempt, so the combined spec exercises the ladder via the safe
+    # fallback AND trips the breaker.
+    "overflow": ("raise:qserve.execute@0,overflow:phj@0", "overflow:phj@0"),
+    "pallas": ("pallas:*", "pallas:*"),
+    "raise": ("raise:qserve.execute", ""),
+    "estimates": ("estimates:/32", "estimates:/32"),
+}
+RAISE_FAULTED = 4  # hard-faulted queries in the raise family
+
+# plan constants (fixed per shape — a shape is ONE signature; only the
+# dataset sizes vary, inside one capacity bucket)
+PLANS = {
+    "join": scan("S").join(scan("R"), key="k"),
+    "groupby": scan("S").group_by("k", s1="sum"),
+    "groupjoin": scan("fact").join(scan("dim0"), left_key="fk0",
+                                   right_key="k0").group_by("fk0",
+                                                            payload="sum"),
+    "topk": scan("S").filter("s1", "<", 1 << 30).order_by("s1", limit=32),
+}
+
+
+def canon(table, count):
+    """Valid rows, order- and shape-insensitive (integer payloads)."""
+    n = int(count)
+    cols = sorted(table.column_names)
+    mats = [np.asarray(table[c])[:n] for c in cols]
+    return tuple(cols), sorted(zip(*[m.tolist() for m in mats]))
+
+
+@dataclasses.dataclass
+class ChaosQuery:
+    qid: int
+    shape: str
+    plan: object
+    tables: dict
+    oracle: object = None  # canonicalized fault-free result
+
+
+def _make_tables(shape: str, rng: np.random.Generator) -> dict:
+    """One dataset for `shape`, sized inside the shape's capacity bucket
+    (so every query of a shape lands on ONE plan signature, and valid
+    counts never equal a bucket — saturation stays a truncation signal)."""
+    seed = int(rng.integers(0, 2**31 - 1))
+    if shape == "join":
+        n_r, n_s = int(rng.integers(300, 480)), int(rng.integers(1100, 1900))
+        R, Stab = relgen.generate(relgen.JoinWorkload(
+            "cj", n_r, n_s, 1, 1, seed=seed))
+        return {"R": R, "S": Stab}
+    if shape in ("groupby", "topk"):
+        # sparse group keys (domain 5000 >> distinct): the shape whose
+        # capacities hinge on the distinct-count estimate
+        n_s = int(rng.integers(1100, 1900))
+        _, Stab = relgen.generate(relgen.JoinWorkload(
+            "cg", 5000, n_s, 1, 1, seed=seed))
+        return {"S": Stab}
+    n_fact, n_dim = int(rng.integers(600, 1000)), int(rng.integers(70, 120))
+    fact, dims, _, _ = relgen.generate_star(n_fact, n_dim, 1, seed=seed)
+    return {"fact": fact, "dim0": dims[0]}
+
+
+def build_mix(n_queries: int, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    return [ChaosQuery(qid=i, shape=SHAPES[i % len(SHAPES)],
+                       plan=PLANS[SHAPES[i % len(SHAPES)]],
+                       tables=_make_tables(SHAPES[i % len(SHAPES)], rng))
+            for i in range(n_queries)]
+
+
+def _counter_window():
+    names = [n for n, m in metrics.REGISTRY._metrics.items()
+             if isinstance(m, metrics.Counter)]
+    return {n: metrics.counter(n).value for n in names}
+
+
+def _counter_delta(before: dict) -> dict:
+    after = _counter_window()
+    keys = set(before) | set(after)
+    return {k: after.get(k, 0) - before.get(k, 0)
+            for k in sorted(keys)
+            if after.get(k, 0) != before.get(k, 0)}
+
+
+def _drive(queries, fault_for=None, submit_per_tick: int = 4,
+           server_kw: dict | None = None):
+    """One soak pass: fresh server, `submit_per_tick` arrivals per tick,
+    step until drained. Returns (server, requests, counter_deltas,
+    wall_s)."""
+    before = _counter_window()
+    kw = dict(measure_profile=True, breaker_cooldown=5)
+    kw.update(server_kw or {})
+    server = QueryServer(**kw)
+    reqs = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(queries) or server.queue:
+        for _ in range(submit_per_tick):
+            if i < len(queries):
+                q = queries[i]
+                spec = fault_for(q) if fault_for else ""
+                req = QueryRequest(qid=q.qid, plan=q.plan, tables=q.tables,
+                                   fault_spec=spec)
+                server.submit(req)
+                reqs.append(req)
+                i += 1
+        server.step()
+    return server, reqs, _counter_delta(before), time.perf_counter() - t0
+
+
+def _warm_walls(reqs) -> dict:
+    """Per-shape-signature exec wall times EXCLUDING each signature's
+    first completed run (which pays the jit compile)."""
+    seen: set = set()
+    walls: dict[str, list] = {}
+    for req in reqs:
+        if not req.done or req.error or req.result is None:
+            continue
+        if req.signature not in seen:
+            seen.add(req.signature)
+            continue
+        walls.setdefault(req.signature, []).append(req.exec_wall_s)
+    return walls
+
+
+def run_chaos(queries_per_family: int = 200, seed: int = 0,
+              smoke: bool = False,
+              families=("overflow", "pallas", "raise", "estimates")) -> dict:
+    if smoke:
+        queries_per_family = min(queries_per_family, 48)
+    failures: list[str] = []
+
+    def check(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    queries = build_mix(queries_per_family, seed=seed)
+    by_shape = {s: [q for q in queries if q.shape == s] for s in SHAPES}
+
+    # ---- baseline: fault-free oracles + latency/throughput floor --------
+    server, reqs, delta, wall = _drive(queries)
+    req_by_qid = {r.qid: r for r in reqs}
+    sig_of_shape: dict[str, str] = {}
+    for q in queries:
+        req = req_by_qid[q.qid]
+        check(req.done and not req.error,
+              f"baseline.q{q.qid}: {req.error or 'not done'}")
+        check(req.path == "fast", f"baseline.q{q.qid}: path={req.path}")
+        if req.result is not None:
+            q.oracle = canon(*req.result)
+        sig_of_shape[q.shape] = req.signature
+    check(delta.get("qserve.failed", 0) == 0, "baseline.failed_nonzero")
+    check(delta.get("qserve.saturations", 0) == 0,
+          "baseline.saturations_nonzero")
+    # spot-check oracles against independent one-shot engine runs
+    for s in SHAPES:
+        q = by_shape[s][0]
+        one_shot = optimize(q.plan, S.Catalog(q.tables),
+                            measure_profile=True).run()
+        check(q.oracle == canon(*one_shot), f"baseline.oracle_mismatch.{s}")
+
+    walls = _warm_walls(reqs)
+    all_walls = [w for ws in walls.values() for w in ws]
+    base_p = metrics.percentiles(all_walls, (50, 95, 99))
+    base_shape_p99 = {s: metrics.percentiles(walls.get(sig_of_shape[s], []),
+                                             (99,))["p99"] for s in SHAPES}
+    baseline = {
+        "queries": len(queries), "wall_s": wall,
+        "throughput_qps": len(queries) / wall if wall else 0.0,
+        "p50_s": base_p["p50"], "p95_s": base_p["p95"],
+        "p99_s": base_p["p99"],
+        "per_shape_p99_s": base_shape_p99,
+        "plans_compiled": delta.get("qserve.plans_compiled", 0),
+        "plan_cache_hits": delta.get("qserve.plan_cache_hits", 0),
+        "counters": delta,
+    }
+    check(baseline["plans_compiled"] == len(SHAPES),
+          f"baseline.compiles={baseline['plans_compiled']} != {len(SHAPES)}")
+
+    # ---- fault families -------------------------------------------------
+    family_reports = {}
+    for family in families:
+        target = FAMILY_TARGETS[family]
+        first_spec, rest_spec = FAMILY_SPECS[family]
+        n_first = RAISE_FAULTED if family == "raise" else 2
+        seen_targets = {"n": 0}
+
+        def fault_for(q, _target=target, _first=first_spec, _rest=rest_spec,
+                      _n_first=n_first, _seen=seen_targets):
+            if q.shape != _target:
+                return ""
+            _seen["n"] += 1
+            return _first if _seen["n"] <= _n_first else _rest
+
+        server, reqs, delta, wall = _drive(queries, fault_for=fault_for)
+        req_by_qid = {r.qid: r for r in reqs}
+        target_qids = [q.qid for q in by_shape[target]]
+        expect_failed = ([q.qid for q in by_shape[target][:RAISE_FAULTED]]
+                         if family == "raise" else [])
+
+        wrong = contaminated = 0
+        for q in queries:
+            req = req_by_qid[q.qid]
+            if q.qid in expect_failed:
+                check(req.error == "failed",
+                      f"{family}.q{q.qid}: expected failed, got "
+                      f"{req.error or req.path}")
+                continue
+            if not (req.done and not req.error and req.result is not None):
+                check(False, f"{family}.q{q.qid}: {req.error or 'not done'} "
+                             f"{req.detail}")
+                continue
+            if canon(*req.result) != q.oracle:
+                wrong += 1
+            if q.shape != target and (req.path != "fast" or req.escalations):
+                contaminated += 1
+        check(wrong == 0, f"{family}.wrong_results={wrong}")
+        check(contaminated == 0, f"{family}.contaminated={contaminated}")
+        check(delta.get("qserve.failed", 0) == len(expect_failed),
+              f"{family}.failed={delta.get('qserve.failed', 0)} != "
+              f"{len(expect_failed)}")
+        check(delta.get("qserve.shed", 0) == 0, f"{family}.shed_nonzero")
+        check(delta.get("resilience.faults_fired", 0) > 0,
+              f"{family}.no_faults_fired")
+
+        # family-specific counter consistency
+        if family == "overflow":
+            check(delta.get("resilience.ladder_escalations", 0) > 0,
+                  "overflow.no_ladder_escalations")
+            check(delta.get("qserve.breaker_opens", 0) >= 1,
+                  "overflow.breaker_never_opened")
+            check(delta.get("qserve.breaker_closes", 0) >= 1,
+                  "overflow.breaker_never_closed")
+        elif family == "pallas":
+            check(delta.get("resilience.kernel_fallbacks", 0) > 0,
+                  "pallas.no_kernel_fallbacks")
+            check(delta.get("qserve.breaker_opens", 0) == 0,
+                  "pallas.breaker_opened")
+        elif family == "raise":
+            check(delta.get("qserve.breaker_opens", 0) >= 1,
+                  "raise.breaker_never_opened")
+            check(delta.get("qserve.breaker_closes", 0) >= 1,
+                  "raise.breaker_never_closed")
+            br = server.breakers.get(sig_of_shape[target])
+            check(br is not None and br.state == "closed",
+                  "raise.breaker_not_recovered")
+        elif family == "estimates":
+            check(delta.get("qserve.saturations", 0) > 0,
+                  "estimates.no_saturations")
+            check(delta.get("qserve.safe_escalations", 0) > 0,
+                  "estimates.no_safe_escalations")
+            check(delta.get("qserve.breaker_opens", 0) >= 1,
+                  "estimates.breaker_never_opened")
+
+        # blast radius: untargeted signatures' warm p99 within 2x baseline
+        walls = _warm_walls(reqs)
+        confinement = {}
+        for s in SHAPES:
+            if s == target:
+                continue
+            p99 = metrics.percentiles(walls.get(sig_of_shape[s], []),
+                                      (99,))["p99"]
+            base = base_shape_p99[s]
+            confinement[s] = {"p99_s": p99, "baseline_p99_s": base}
+            check(p99 <= max(2 * base, base + 0.010),
+                  f"{family}.p99_blowup.{s}: {p99:.4f}s vs base {base:.4f}s")
+
+        family_reports[family] = {
+            "queries": len(queries), "target_shape": target,
+            "targeted": len(target_qids), "wall_s": wall,
+            "expected_failed": len(expect_failed),
+            "wrong_results": wrong, "contaminated": contaminated,
+            "confinement": confinement, "counters": delta,
+        }
+
+    # ---- pressure: shedding / deadlines / admission pricing -------------
+    pq = by_shape["join"][0]  # one signature, 14 simultaneous arrivals
+    before = _counter_window()
+    server = QueryServer(measure_profile=True, max_queue=8,
+                         slots_per_tick=2)
+    press_reqs = [QueryRequest(qid=1000 + j, plan=pq.plan, tables=pq.tables,
+                               # the first two expire on the very tick they
+                               # would be admitted: sweep-before-admit
+                               # must evict, not run, them
+                               deadline_ticks=1 if j < 2 else None)
+                  for j in range(14)]
+    for req in press_reqs:
+        server.submit(req)
+    server.run()
+    shed = sum(r.error == "shed" for r in press_reqs)
+    dead = sum(r.error == "deadline" for r in press_reqs)
+    done = sum(bool(r.result is not None and not r.error)
+               for r in press_reqs)
+    check(shed == 6, f"pressure.shed={shed} != 6")  # 14 arrivals, queue of 8
+    check(dead == 2, f"pressure.deadline={dead} != 2")
+    check(done == 6, f"pressure.completed={done} != 6")
+    priced = QueryServer(measure_profile=True, max_price_s=1e-12)
+    rej = [QueryRequest(qid=2000 + j, plan=pq.plan, tables=pq.tables)
+           for j in range(2)]
+    for req in rej:
+        priced.submit(req)
+    priced.run()
+    check(all(r.error == "rejected" for r in rej), "pressure.not_rejected")
+    pressure = {"shed": shed, "deadline": dead, "completed": done,
+                "rejected": sum(r.error == "rejected" for r in rej),
+                "counters": _counter_delta(before)}
+
+    return {
+        "ok": not failures, "failures": failures,
+        "config": {"queries_per_family": queries_per_family, "seed": seed,
+                   "smoke": smoke, "shapes": list(SHAPES),
+                   "families": list(families)},
+        "baseline": baseline, "families": family_reports,
+        "pressure": pressure,
+    }

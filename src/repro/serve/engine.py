@@ -61,8 +61,9 @@ class Request:
     max_tokens: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
-    # absolute engine tick by which the request must finish ("" = none);
-    # overdue requests are evicted from slot or queue with error="deadline"
+    # absolute engine tick by which the request must finish (None = no
+    # deadline); overdue requests are evicted from slot or queue with
+    # error="deadline"
     deadline_ticks: int | None = None
     # why the request finished without completing: "", "shed", "deadline",
     # "poisoned"
@@ -70,6 +71,14 @@ class Request:
     # re-admissions allowed after this request's slot is evicted for a
     # persistent step failure before it is failed alone
     retries_left: int = 1
+    # -- latency breakdown (engine ticks; accumulated across requeues and
+    # observed into the serve.ticks_* histograms when the request ends) --
+    submit_tick: int = -1
+    done_tick: int = -1
+    ticks_queued: int = 0   # ticks spent waiting in the queue
+    ticks_running: int = 0  # ticks spent live in a slot
+    ticks_retrying: int = 0  # failed step attempts charged while live
+    _enqueued_at: int = dataclasses.field(default=0, repr=False)
 
 
 class ServeEngine:
@@ -100,16 +109,36 @@ class ServeEngine:
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos)
         )
 
+    # -- latency accounting --------------------------------------------------
+    def _finish(self, req: Request):
+        """Stamp the end of a request's life and publish its tick
+        breakdown (queued vs running vs retrying) to the serve.ticks_*
+        histograms — `latency_summary()` reports their percentiles."""
+        req.done_tick = self.tick
+        metrics.histogram("serve.ticks_queued").observe(req.ticks_queued)
+        metrics.histogram("serve.ticks_running").observe(req.ticks_running)
+        metrics.histogram("serve.ticks_retrying").observe(req.ticks_retrying)
+
+    @staticmethod
+    def latency_summary(pcts=(50, 95, 99)) -> dict:
+        """Per-stage tick percentiles over every finished request."""
+        return {name: metrics.histogram(f"serve.{name}").summary(pcts)
+                for name in ("ticks_queued", "ticks_running",
+                             "ticks_retrying")}
+
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        req.submit_tick = self.tick
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             # load shedding: fail fast at admission instead of letting the
             # backlog grow past what the engine can drain
             req.error, req.done = "shed", True
+            self._finish(req)
             metrics.counter("resilience.serve_shed").inc()
             escalation.record_degradation(
                 "serve", f"shed rid={req.rid}: queue full ({self.max_queue})")
             return
+        req._enqueued_at = self.tick
         self.queue.append(req)
 
     def _admit(self):
@@ -124,6 +153,7 @@ class ServeEngine:
         for i in range(self.max_batch):
             if self.slot_req[i] is None and self.queue:
                 req = self.queue.pop(0)
+                req.ticks_queued += self.tick - req._enqueued_at
                 self.slot_req[i] = req
                 self._slot_seq[i] = next(self._admit_seq)
                 # fresh slot: position 0, pristine cache rows (no leakage
@@ -144,6 +174,7 @@ class ServeEngine:
         for i, req in enumerate(self.slot_req):
             if self._overdue(req):
                 req.error, req.done = "deadline", True
+                self._finish(req)
                 self.slot_req[i] = None
                 metrics.counter("resilience.serve_deadline_evictions").inc()
         overdue = [r for r in self.queue if self._overdue(r)]
@@ -151,6 +182,8 @@ class ServeEngine:
             self.queue = [r for r in self.queue if not self._overdue(r)]
             for req in overdue:
                 req.error, req.done = "deadline", True
+                req.ticks_queued += self.tick - req._enqueued_at
+                self._finish(req)
                 metrics.counter("resilience.serve_deadline_evictions").inc()
 
     def _evict_poisoned(self, err: Exception):
@@ -168,9 +201,11 @@ class ServeEngine:
         if req.retries_left > 0:
             req.retries_left -= 1
             req.out.clear()  # partial output from the failed run is void
+            req._enqueued_at = self.tick
             self.queue.append(req)
         else:
             req.error, req.done = "poisoned", True
+            self._finish(req)
 
     # -- one engine tick ------------------------------------------------------
     def step(self):
@@ -191,6 +226,8 @@ class ServeEngine:
                 )
                 break
             except Exception as e:  # noqa: BLE001 — isolate, don't crash
+                for i in live:  # the whole batch burns the failed attempt
+                    self.slot_req[i].ticks_retrying += 1
                 if retry < self.step_retries:
                     metrics.counter("resilience.serve_retries").inc()
                     time.sleep(self.retry_backoff_s * (1 << retry))
@@ -202,6 +239,7 @@ class ServeEngine:
         for i in live:
             self.slot_pos[i] += 1
             req = self.slot_req[i]
+            req.ticks_running += 1
             if req._prompt_cursor < len(req.prompt):  # still prefilling
                 self.tokens[i] = req.prompt[req._prompt_cursor]
                 req._prompt_cursor += 1
@@ -212,6 +250,7 @@ class ServeEngine:
             if nxt == self.eos_id or len(req.out) >= req.max_tokens \
                or int(self.slot_pos[i]) >= self.max_len - 1:
                 req.done = True
+                self._finish(req)
                 self.slot_req[i] = None  # free slot for continuous batching
         return True
 

@@ -615,3 +615,22 @@ def test_groupby_strategy_reacts_to_key_domain():
     assert int(c_dense) == len(set(np.asarray(dense["k"]).tolist()))
     _, c_sparse = p_sparse.run()
     assert int(c_sparse) == len(set(sparse_keys.tolist()))
+
+
+def test_eager_run_traced_by_outer_jit_skips_ladders():
+    """`run(jit=False)` wrapped in an OUTER jax.jit (how the benchmarks
+    time the interpreted plan as one executable) must not try to run the
+    checked ladders: their overflow checks are host-side bool()s,
+    impossible on tracers. The plain drivers run instead, bit-identically
+    to the eager checked result."""
+    import jax
+
+    R, S = relgen.generate(relgen.JoinWorkload("t", 400, 1500, 1, 1, seed=9))
+    cat = Catalog({"R": R, "S": S})
+    q = scan("S").join(scan("R"), key="k").group_by("k", s1="sum")
+    plan = optimize(q, cat, force_join=("phj", "gfur"), **OPT)
+    eager_t, eager_n = plan.run(jit=False)  # concrete: ladders engage
+    tables = dict(plan.catalog.tables)
+    jit_t, jit_n = jax.jit(lambda tb: plan.run(tb, jit=False))(tables)
+    cols = eager_t.column_names
+    assert _rows(jit_t, jit_n, cols) == _rows(eager_t, eager_n, cols)

@@ -351,3 +351,31 @@ def test_obs_cli_smoke(tmp_path, monkeypatch, calstore_path):
     assert ent["profiles"] and ent["residuals"]
     assert any(k.startswith(("groupby/", "groupjoin/", "join/"))
                for k in ent["residuals"])
+
+
+def test_metrics_percentiles_nearest_rank():
+    vals = list(range(1, 101))  # 1..100
+    p = metrics.percentiles(vals, (50, 95, 99))
+    assert p == {"p50": 50.0, "p95": 95.0, "p99": 99.0}
+    assert metrics.percentiles([], (50,)) == {"p50": 0.0}
+    assert metrics.percentiles([7.0], (50, 99)) == {"p50": 7.0, "p99": 7.0}
+    # fractional percentile labels format cleanly
+    assert metrics.percentiles(vals, (99.9,)) == {"p99.9": 100.0}
+
+
+def test_histogram_summary_and_bounded_samples():
+    h = metrics.Histogram("t")
+    assert h.summary() == {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                           "p50": 0.0, "p95": 0.0, "p99": 0.0}
+    for v in range(20_000):
+        h.observe(float(v))
+    # the sample buffer is decimated deterministically, never unbounded
+    assert len(h.samples) < metrics.SAMPLE_CAP
+    assert h.stride > 1
+    s = h.summary()
+    assert s["count"] == 20_000 and s["min"] == 0.0 and s["max"] == 19_999.0
+    # stride-thinned percentiles stay representative of the full stream
+    assert abs(s["p50"] - 10_000) < 1_000
+    assert abs(s["p99"] - 19_800) < 1_000
+    # as_value (the snapshot shape) is unchanged by the sample buffer
+    assert set(h.as_value()) == {"count", "sum", "mean", "min", "max", "last"}

@@ -713,3 +713,100 @@ def test_degradations_recorded_in_ring(rng):
         kops.histogram(digits, 16, "pallas")
     events = escalation.recent_degradations(since)
     assert any(d["component"] == "kernels.histogram" for d in events)
+
+
+def test_serve_deadline_expires_on_admission_tick(serve_setup):
+    """A queued request whose deadline lands on the EXACT tick a slot
+    frees up is evicted by the deadline sweep, not admitted: sweep runs
+    before admission every tick."""
+    from repro.serve.engine import Request
+
+    def occupied_engine():
+        eng = _engine(serve_setup, max_batch=1)
+        eng.submit(Request(rid=0, prompt=[3, 4, 5], max_tokens=4))
+        return eng
+
+    # reference run: when would the victim be admitted?
+    eng = occupied_engine()
+    ref = Request(rid=1, prompt=[3, 4], max_tokens=2)
+    eng.submit(ref)
+    eng.run()
+    assert ref.done and ref.error == ""
+    admit_tick = ref.submit_tick + ref.ticks_queued
+
+    # deadline == admission tick: the sweep must win the race
+    eng = occupied_engine()
+    victim = Request(rid=1, prompt=[3, 4], max_tokens=2,
+                     deadline_ticks=admit_tick)
+    eng.submit(victim)
+    eng.run()
+    assert victim.done and victim.error == "deadline"
+    assert victim.out == [] and victim.done_tick == admit_tick
+
+    # a deadline past its completion point and it runs untouched
+    eng = occupied_engine()
+    ok = Request(rid=1, prompt=[3, 4], max_tokens=2,
+                 deadline_ticks=admit_tick + 10)
+    eng.submit(ok)
+    eng.run()
+    assert ok.done and ok.error == "" and len(ok.out) == 2
+
+
+def test_serve_requeued_request_reruns_full_prefill(serve_setup, rng):
+    """A request evicted mid-decode and requeued must re-run its FULL
+    prefill with cleared output: its final output equals a fresh engine's
+    (no cache or output state leaks from the failed run)."""
+    from repro.models import model as M
+    from repro.serve.engine import Request
+
+    cfg, params = serve_setup
+    prompt = rng.integers(3, cfg.vocab_size, 3).tolist()
+
+    eng_ref = _engine(serve_setup, max_batch=1)
+    r_ref = Request(rid=0, prompt=list(prompt), max_tokens=4)
+    eng_ref.submit(r_ref)
+    eng_ref.run()
+    assert r_ref.done and len(r_ref.out) == 4
+
+    eng = _engine(serve_setup, max_batch=1, step_retries=0)
+    real = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+    calls = {"n": 0}
+
+    def step_fn(p, c, t, pos):
+        calls["n"] += 1
+        if calls["n"] == 5:  # two decode outputs exist; then the step dies
+            raise RuntimeError("mid-decode fault")
+        return real(p, c, t, pos)
+
+    eng._step = step_fn
+    r = Request(rid=1, prompt=list(prompt), max_tokens=4, retries_left=1)
+    eng.submit(r)
+    eng.run()
+    assert r.done and r.error == "" and r.retries_left == 0
+    assert r.ticks_retrying >= 1
+    assert r.out == r_ref.out, (r.out, r_ref.out)
+
+
+def test_serve_latency_breakdown(serve_setup, rng):
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, _ = serve_setup
+    eng = _engine(serve_setup, max_batch=1)
+    reqs = [Request(rid=i, max_tokens=3,
+                    prompt=rng.integers(3, cfg.vocab_size, 3).tolist())
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        assert r.done and r.error == ""
+        assert r.ticks_running > 0 and r.ticks_retrying == 0
+        # ticks are conserved: queued + running spans submit..done
+        assert r.ticks_queued + r.ticks_running == r.done_tick - r.submit_tick + 1
+    # single slot: each successor queues at least as long as the last
+    waits = [r.ticks_queued for r in reqs]
+    assert waits == sorted(waits) and waits[-1] > waits[0]
+    summary = ServeEngine.latency_summary()
+    for stage in ("ticks_queued", "ticks_running", "ticks_retrying"):
+        assert summary[stage]["count"] >= 3
+        assert {"p50", "p95", "p99"} <= set(summary[stage])
