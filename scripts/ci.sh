@@ -72,7 +72,8 @@ rep = json.load(open("RESILIENCE_SMOKE.json"))
 assert rep["ok"] and not rep["failures"], rep["failures"]
 assert all(c["ok"] for c in rep["cases"]), rep["cases"]
 for name in ("resilience.ladder_escalations", "resilience.kernel_fallbacks",
-             "resilience.plan_degradations", "resilience.faults_fired"):
+             "resilience.plan_degradations", "resilience.oom_injected",
+             "resilience.faults_fired"):
     assert rep["metrics"].get(name, 0) > 0, (name, rep["metrics"])
 PY
 echo "ci: resilience fault-injection smoke OK (RESILIENCE_SMOKE.json, all counters moved)"
@@ -162,5 +163,15 @@ assert fams["estimates"]["counters"]["qserve.saturations"] > 0
 assert fams["overflow"]["counters"]["resilience.ladder_escalations"] > 0
 assert rep["pressure"]["shed"] == 6 and rep["pressure"]["deadline"] == 2
 assert rep["pressure"]["rejected"] == 2
+# memory governor (DESIGN.md §15): big splittable queries served through
+# the morsel driver under a tight byte budget, unsplittable ones rejected
+# with the typed error, reservations never over the budget, zero wrong
+# results on either path
+mem = rep["memory"]
+assert mem["chunked_runs"] > 0, mem
+assert mem["mem_rejections"] > 0, mem
+assert mem["reserved_le_budget"] is True, mem
+assert mem["wrong_results"] == 0, mem
+assert mem["oom_injected"] > 0, mem
 PY
 echo "ci: smoke-scale serve chaos soak OK (BENCH_serve.json, all families clean)"

@@ -27,9 +27,10 @@ Typical use::
     print(plan.explain())            # per-op algorithm/pattern + cost
     result, count = plan.run()       # executes under jax.jit
 """
-from .executor import execute, run
+from .executor import execute, plan_peak_bytes, run, run_morsels
 from .logical import Filter, GroupBy, Join, OrderByLimit, Plan, Project, Scan, output_columns, scan
-from .physical import Optimizer, PhysicalPlan, calibrated_profile, optimize
+from .membudget import MemoryBudget, MemoryBudgetExceeded, detect_budget_bytes, is_memory_error
+from .physical import Optimizer, PhysicalPlan, calibrated_profile, morsel_axis, morsel_plan, optimize
 from .stats import (Catalog, ColumnStats, TableStats, collect_table_stats, estimate_distinct,
                     estimate_match_ratio, estimate_selectivity, estimate_zipf,
                     synthesize_join_stats)
@@ -41,5 +42,8 @@ __all__ = [
     "estimate_distinct", "estimate_match_ratio", "estimate_zipf",
     "estimate_selectivity", "synthesize_join_stats",
     "Optimizer", "PhysicalPlan", "optimize", "calibrated_profile",
-    "execute", "run",
+    "morsel_axis", "morsel_plan",
+    "execute", "run", "run_morsels", "plan_peak_bytes",
+    "MemoryBudget", "MemoryBudgetExceeded", "detect_budget_bytes",
+    "is_memory_error",
 ]

@@ -28,10 +28,11 @@ from repro.core import primitives as prim
 from repro.core.groupby import groupby_partition_checked
 from repro.core.groupjoin import groupjoin_checked
 from repro.core.hash_join import phj_join_checked
-from repro.core.table import KEY_SENTINEL, Table
+from repro.core.table import KEY_SENTINEL, Table, concat_tables
 from repro.obs import metrics
 from repro.resilience import escalation, faults
 
+from . import membudget
 from . import physical as P
 from .logical import FILTER_OP_FNS
 
@@ -364,6 +365,10 @@ def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
 
     def attempt(p: "P.PhysicalPlan"):
         faults.check_site("executor.run")
+        faults.check_oom("executor.run")
+        if p.morsel_factor > 1:
+            # memory rung (DESIGN.md §15): out-of-core morsel driver
+            return run_morsels(p, tables, counts=counts, jit=jit)
         if not jit:
             # eager runs are the diagnostic path: capacity-sensitive nodes
             # go through their resilience ladders and record reports
@@ -394,7 +399,127 @@ def run(plan: "P.PhysicalPlan", tables: Mapping[str, Table] | None = None,
             raise
         reason = f"{type(e).__name__}: {e}"[:120]
         if plan.degraded_plan is None:
-            plan.degraded_plan = P.degrade_plan(plan, reason)
+            # allocation failures route onto the MEMORY rung when the plan
+            # is splittable — a smaller working set, never the default
+            # rung's doubled capacities (DESIGN.md §15)
+            if (membudget.is_memory_error(e)
+                    and P.morsel_axis(plan.root) is not None):
+                plan.degraded_plan = P.degrade_plan(plan, reason, memory=True)
+            else:
+                plan.degraded_plan = P.degrade_plan(plan, reason)
         metrics.counter("resilience.plan_degradations").inc()
         escalation.record_degradation("executor", reason)
         return attempt(plan.degraded_plan)
+
+
+# ---------------------------------------------------------------------------
+# morsel-driven out-of-core execution (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def run_morsels(plan: "P.PhysicalPlan",
+                tables: Mapping[str, Table] | None = None, *,
+                counts=None, factor: int | None = None, jit: bool = True):
+    """Execute `plan` out-of-core: split the morsel axis (the probe spine's
+    base scan, `physical.morsel_axis`) into `factor` equal chunks, run the
+    capacity-scaled per-morsel clone (`physical.morsel_plan`) over each
+    chunk through ONE compiled bucketed executable — chunk validity rides
+    in as a traced count scalar, so every morsel reuses the same
+    compilation — and recombine host-side: concat for row-shaped roots,
+    a partial-aggregate merge for group roots (sum/count/min/max
+    re-reduce; mean = merged sum / merged count, the exact `_finalize`
+    expression). Returns (Table, valid_count) shaped exactly like
+    whole-plan `run`."""
+    factor = int(factor if factor is not None else plan.morsel_factor)
+    if factor < 2:
+        raise ValueError(f"morsel factor must be >= 2, got {factor}")
+    axis = P.morsel_axis(plan.root)
+    if axis is None:
+        raise ValueError("plan has no morsel axis (not splittable)")
+    tables = dict(tables if tables is not None else plan.catalog.tables)
+    axis_table = tables[axis]
+    rows = axis_table.num_rows
+    total = int(counts[axis]) if counts is not None and axis in counts else rows
+    mp = P.morsel_plan(plan, factor, rows=rows)
+    m = P.morsel_rows(rows, factor)
+    padded = axis_table.pad_to(m * factor)
+    base_counts = dict(counts) if counts is not None else {}
+    parts = []
+    for i in range(factor):
+        cnt = min(max(total - i * m, 0), m)
+        if cnt == 0 and i > 0:
+            continue  # past the valid tail; morsel 0 always runs so an
+            # empty input still yields a well-formed empty result
+        chunk = Table({n: v[i * m:(i + 1) * m]
+                       for n, v in padded.columns.items()})
+        mtables = dict(tables)
+        mtables[axis] = chunk
+        mcounts = dict(base_counts)
+        mcounts[axis] = cnt
+        metrics.counter("engine.morsel_runs").inc()
+        parts.append(run(mp, mtables, jit=jit, counts=mcounts))
+    return _recombine(plan.root, parts)
+
+
+def _recombine(root: P.PhysNode, parts: list):
+    """Merge per-morsel results into the whole-plan (Table, count)."""
+    sliced = [(t.head(int(c)), int(c)) for t, c in parts]
+    if isinstance(root, (P.PGroupBy, P.PGroupJoin)):
+        return _merge_partials(root, sliced)
+    # row-shaped root (join/filter/project/scan spine): morsels partition
+    # the probe, so valid rows concatenate — total is the whole-plan count
+    # and fits the root capacity whenever the whole plan would have
+    total = sum(c for _, c in sliced)
+    if total > root.capacity:
+        raise ValueError(
+            f"morsel recombine overflow: {total} rows exceed the root "
+            f"capacity {root.capacity}")
+    cat = concat_tables([t for t, _ in sliced])
+    return cat.pad_to(root.capacity), jnp.asarray(total, jnp.int32)
+
+
+def _merge_partials(root, sliced):
+    """Re-reduce per-morsel partial aggregates (the `partial_agg_plan`
+    rewrite) into final aggregates, bit-identical to the whole-plan
+    result: integer sums/counts/min/max are associative, and mean divides
+    the merged sum by the merged count with the exact `_finalize`
+    expression (`acc / max(count,1).astype(acc.dtype)`)."""
+    key = root.key if isinstance(root, P.PGroupBy) else root.group_key
+    partial, count_col = P.partial_agg_plan(root)
+    combine = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+    cat = concat_tables([t for t, _ in sliced])
+    merged, count = group_aggregate(
+        cat, key=key,
+        aggs={f"{c}_{pop}": combine[pop] for c, pop in partial},
+        num_groups=root.capacity, strategy="sort",
+    )
+
+    def final(c, op):
+        if op == "mean":
+            s = merged[f"{c}_sum_sum"]
+            n = merged[f"{count_col}_count_sum"]
+            return s / jnp.maximum(n, 1).astype(s.dtype)
+        pop = dict(partial)[c]
+        return merged[f"{c}_{pop}_{combine[pop]}"]
+
+    out = {key: merged[key]}
+    out.update({f"{c}_{op}": final(c, op) for c, op in root.aggs})
+    return Table(out).select(root.columns), count
+
+
+def plan_peak_bytes(plan: "P.PhysicalPlan",
+                    tables: Mapping[str, Table] | None = None,
+                    counts=None) -> int:
+    """The plan's whole-program peak-live-bytes watermark (the byte the
+    memory governor admits against), from a single root trace — the cheap
+    subset of `audit()` (which traces every subtree to attribute per-node
+    budgets). With `counts`, traces the bucketed form the serving layer
+    actually runs."""
+    from repro.analysis import jaxpr_audit as A
+
+    tables = dict(tables if tables is not None else plan.catalog.tables)
+    if counts is not None:
+        ct = {k: jnp.asarray(v, jnp.int32) for k, v in counts.items()}
+        closed = jax.make_jaxpr(
+            lambda tb, c: execute(plan.root, tb, c))(tables, ct)
+    else:
+        closed = jax.make_jaxpr(lambda tb: execute(plan.root, tb))(tables)
+    return int(A.audit_jaxpr(closed).peak_live_bytes)

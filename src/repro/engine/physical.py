@@ -302,6 +302,17 @@ class PhysicalPlan:
     # its compiled executable instead of re-degrading
     degraded_plan: "PhysicalPlan | None" = dataclasses.field(
         default=None, repr=False, compare=False)
+    # Memory governor (DESIGN.md §15): factor > 1 routes executor.run
+    # through the morsel-driven out-of-core driver — the probe/input side
+    # splits into `morsel_factor` power-of-two chunks, each run through
+    # ONE compiled bucketed executable, recombined host-side. Set by the
+    # memory rung of degrade_plan and by the serving layer's byte-budget
+    # admission; 1 = whole-plan execution.
+    morsel_factor: int = 1
+    # factor -> capacity-scaled per-morsel clone (see morsel_plan), cached
+    # so every morsel of every request reuses one compiled executable
+    morsel_plans: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def explain(self, verify: bool = False, tables: Mapping | None = None,
                 actuals=None) -> str:
@@ -341,6 +352,24 @@ class PhysicalPlan:
                     f"compiled[{compiled}] "
                     f"peak-live={entry.report.peak_live_bytes/1024:.0f}KiB "
                     f"{status}")
+            if isinstance(node, PJoin):
+                # per-join memory ledger: the paper's §4.4 phase model
+                # (core.memmodel, Tables 1-2) next to the jaxpr liveness
+                # watermark when verify=True — the two cross-check each
+                # other (model: GFTR peak <= GFUR peak at equal rows)
+                from repro.core import memmodel
+
+                n = max(node.build.capacity, node.probe.capacity)
+                model = {p: memmodel.peak_memory_bytes(p, n, 4)
+                         for p in ("gftr", "gfur")}
+                mem = (f"{prefix}{ext}     mem: model["
+                       f"gftr={model['gftr']/1024:.0f}KiB "
+                       f"gfur={model['gfur']/1024:.0f}KiB] "
+                       f"pattern={node.pattern}")
+                if entry is not None:
+                    mem += (f" audited-peak="
+                            f"{entry.report.peak_live_bytes/1024:.0f}KiB")
+                lines.append(mem)
             span = spans.get(path)
             if span is not None:
                 if span.residual is not None:
@@ -1030,16 +1059,215 @@ class Optimizer:
 
 
 # ---------------------------------------------------------------------------
+# morsel-driven out-of-core execution (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def _subtree_scans(node: PhysNode) -> list:
+    """All scan table names in `node`'s subtree (with repeats)."""
+    if isinstance(node, PScan):
+        return [node.table]
+    names: list = []
+    for child in node.children():
+        names += _subtree_scans(child)
+    return names
+
+
+def morsel_axis(root: PhysNode) -> str | None:
+    """Name of the scan table the morsel driver may split, or None when the
+    plan is not splittable.
+
+    The axis is the PROBE spine's base scan: walking root -> probe/child,
+    every probe row is independent (filters, projections, and joins against
+    whole off-spine build sides commute with splitting the probe), so
+    running the plan per probe-chunk and recombining is exact. Not
+    splittable: a group-by/group-join anywhere but the root (its output
+    feeds more plan — partials would leak upward), an order-by-limit
+    (top-k is not a per-chunk concat), or an axis table that also appears
+    on a build side (self-join: splitting one occurrence but not the other
+    changes the result)."""
+    off_spine: list = []
+    node = root
+    if isinstance(node, PGroupBy):
+        node = node.child
+    elif isinstance(node, PGroupJoin):
+        off_spine += _subtree_scans(node.build)
+        node = node.probe
+    while True:
+        if isinstance(node, (PGroupBy, PGroupJoin, POrderByLimit)):
+            return None
+        if isinstance(node, (PFilter, PProject)):
+            node = node.child
+        elif isinstance(node, PJoin):
+            off_spine += _subtree_scans(node.build)
+            node = node.probe
+        elif isinstance(node, PScan):
+            return None if node.table in off_spine else node.table
+        else:
+            return None
+
+
+def morsel_rows(rows: int, factor: int) -> int:
+    """Per-morsel axis rows for splitting `rows` into `factor` chunks:
+    ceil-divided, lane-rounded, never below the 64-row floor."""
+    m = -(-max(int(rows), 1) // int(factor))
+    return max(-(-m // 64) * 64, 64)
+
+
+def partial_agg_plan(node: PhysNode):
+    """Partial-aggregate rewrite for running a root group node per-morsel:
+    ``(partial_aggs, count_col)``.
+
+    Each original aggregate maps to a recombinable partial (sum/count/
+    min/max pass through; mean becomes a sum partial). `count_col` is the
+    column whose ``<col>_count`` partial carries the per-group row count
+    that mean finalization divides by — `count` is column-independent
+    (it counts the group's rows), so any column free of a conflicting
+    partial works; the group key is preferred. None when no mean
+    aggregate. Raises ValueError when no conflict-free rewrite exists
+    (the plan is then not morsel-splittable)."""
+    if isinstance(node, PGroupBy):
+        key, avail = node.key, tuple(node.child.columns)
+    elif isinstance(node, PGroupJoin):
+        # build_key is renamed to the probe key inside the fused driver, so
+        # it cannot carry a partial; every other input column survives
+        key = node.probe_group_key
+        avail = tuple(node.probe.columns) + tuple(
+            c for c in node.build.columns
+            if c not in node.probe.columns and c != node.build_key)
+    else:
+        raise TypeError(f"not a group node: {type(node).__name__}")
+    partial: dict = {}
+    for c, op in node.aggs:
+        pop = "sum" if op == "mean" else op
+        if partial.get(c, pop) != pop:
+            raise ValueError(
+                f"column {c!r} needs both {partial[c]!r} and {pop!r} "
+                "partials; plan is not morsel-splittable")
+        partial[c] = pop
+    count_col = None
+    if any(op == "mean" for _, op in node.aggs):
+        count_col = next((c for c, pop in partial.items() if pop == "count"),
+                         None)
+        if count_col is None:
+            count_col = next(
+                (c for c in (key,) + avail if c not in partial), None)
+            if count_col is None:
+                raise ValueError(
+                    "no free column to carry the count partial for mean; "
+                    "plan is not morsel-splittable")
+            partial[count_col] = "count"
+    return tuple(partial.items()), count_col
+
+
+def morsel_plan(plan: PhysicalPlan, factor: int,
+                rows: int | None = None) -> PhysicalPlan:
+    """Per-morsel clone of `plan` for one chunk of ``morsel_rows(rows,
+    factor)`` axis rows (rows defaults to the catalog's axis table).
+
+    Spine capacities whose output is row-bounded by the chunk shrink to
+    the chunk size — filters and pk_fk joins emit at most one row per
+    probe row, so ``min(capacity, m)`` is exact; m:n joins and anything
+    above them keep full capacity. A root group node's aggregates are
+    rewritten to their recombinable partials (`partial_agg_plan`) with
+    capacity UNCHANGED: scatter accumulators are domain-indexed and any
+    morsel may see every group. Clones are cached on
+    ``plan.morsel_plans`` keyed by (factor, m), so every morsel of every
+    request reuses one compiled bucketed executable."""
+    axis = morsel_axis(plan.root)
+    if axis is None:
+        raise ValueError("plan has no morsel axis (not splittable)")
+    if rows is None:
+        rows = plan.catalog.tables[axis].num_rows
+    m = morsel_rows(rows, factor)
+    key = (int(factor), m)
+    cached = plan.morsel_plans.get(key)
+    if cached is not None:
+        return cached
+
+    def clone(node: PhysNode):
+        """(clone, bounded) — bounded: output rows <= m by construction
+        (a row-nonincreasing chain from the axis scan)."""
+        if isinstance(node, PScan):
+            return node, node.table == axis
+        if isinstance(node, PFilter):
+            child, bounded = clone(node.child)
+            changes = {"child": child} if child is not node.child else {}
+            if bounded:
+                changes["capacity"] = min(node.capacity, m)
+            return (dataclasses.replace(node, **changes) if changes
+                    else node), bounded
+        if isinstance(node, PProject):
+            child, bounded = clone(node.child)
+            out = (dataclasses.replace(node, child=child)
+                   if child is not node.child else node)
+            return out, bounded
+        if isinstance(node, PJoin):
+            build, _ = clone(node.build)
+            probe, p_bounded = clone(node.probe)
+            bounded = p_bounded and node.mode == "pk_fk"
+            changes = {}
+            if build is not node.build:
+                changes["build"] = build
+            if probe is not node.probe:
+                changes["probe"] = probe
+            if bounded:
+                changes["capacity"] = min(node.capacity, m)
+            return (dataclasses.replace(node, **changes) if changes
+                    else node), bounded
+        if isinstance(node, (PGroupBy, PGroupJoin)):
+            # only legal at the root (morsel_axis guarantees)
+            partial, _ = partial_agg_plan(node)
+            if isinstance(node, PGroupBy):
+                child, _ = clone(node.child)
+                cols = (node.key,) + tuple(f"{c}_{op}" for c, op in partial)
+                return dataclasses.replace(
+                    node, child=child, aggs=partial, columns=cols), False
+            build, _ = clone(node.build)
+            probe, _ = clone(node.probe)
+            cols = (node.group_key,) + tuple(
+                f"{c}_{op}" for c, op in partial)
+            return dataclasses.replace(
+                node, build=build, probe=probe, aggs=partial,
+                columns=cols), False
+        return node, False
+
+    root, _ = clone(plan.root)
+    mp = PhysicalPlan(root=root, catalog=plan.catalog,
+                      total_cost=plan.total_cost / factor,
+                      degraded=f"MORSEL[{factor}]")
+    plan.morsel_plans[key] = mp
+    return mp
+
+
+# ---------------------------------------------------------------------------
 # graceful degradation (DESIGN.md §13): the executor's one-shot re-plan
 # ---------------------------------------------------------------------------
-def degrade_plan(plan: PhysicalPlan, reason: str) -> PhysicalPlan:
+def degrade_plan(plan: PhysicalPlan, reason: str, *,
+                 memory: bool = False) -> PhysicalPlan:
     """A conservative clone of `plan` for executor.run's single retry after
     an escalation exhaustion or operator failure: every data-bearing
     capacity doubles (lane-rounded — wrong estimates are the common failure
     mode), group-bys and fused group-joins fall to the always-exact 'sort'
     strategy, and PHJ joins fall to sort-merge (exact for any key
     multiplicity). The clone shares the catalog but never the compiled
-    executable, and is annotated `DEGRADED[reason]` for explain()."""
+    executable, and is annotated `DEGRADED[reason]` for explain().
+
+    ``memory=True`` selects the MEMORY rung instead (DESIGN.md §15): an
+    allocation failure must get a SMALLER working set, never the doubled
+    capacities of the default rung. The clone shares the root and the
+    morsel-plan cache and doubles ``morsel_factor`` (2 on first entry), so
+    executor.run routes it through the morsel-driven out-of-core driver.
+    Raises ValueError when the plan has no morsel axis — the caller must
+    check `morsel_axis` first (an unsplittable plan's memory failure is
+    terminal)."""
+    if memory:
+        if morsel_axis(plan.root) is None:
+            raise ValueError("plan has no morsel axis (not splittable)")
+        factor = max(plan.morsel_factor * 2, 2)
+        return PhysicalPlan(
+            root=plan.root, catalog=plan.catalog,
+            total_cost=plan.total_cost,
+            degraded=f"DEGRADED[{reason}] MORSEL[x{factor}]",
+            morsel_factor=factor, morsel_plans=plan.morsel_plans)
 
     def clone(node: PhysNode) -> PhysNode:
         changes: dict = {}

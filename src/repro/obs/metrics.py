@@ -15,7 +15,16 @@ under `qserve.*`: `submitted` / `completed` / `shed` / `rejected` /
 `plan_cache_hits` (signature cache), `fast_runs` / `fast_failures` /
 `safe_runs` / `safe_escalations` / `saturations` (execution paths), and
 `breaker_opens` / `breaker_probes` / `breaker_closes` (circuit
-breakers). Metrics
+breakers). The memory governor (DESIGN.md §15) adds the `qserve.bytes_*`
+and oom families: `qserve.bytes_reserved` (histogram — in-flight bytes
+ticket ledger observed every tick; its max must never exceed the
+budget), `qserve.mem_rejections` (never-fits typed rejections),
+`qserve.mem_deferrals` (fits-later deferrals — also `serve.mem_deferrals`
+for the batched engine's slot governor), `qserve.chunked_runs`
+(server-dispatched morsel runs), `engine.morsel_runs` (individual
+morsels executed by the out-of-core driver), and
+`resilience.oom_injected` (deterministic `oom:<site>` faults fired).
+Metrics
 are plain Python (no jax import, no locks beyond the GIL's atomicity for
 `+=` on ints): incrementing a counter costs one dict lookup + an add, so
 instrumented hot paths stay hot.

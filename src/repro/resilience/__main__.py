@@ -11,7 +11,10 @@ fault-free oracle:
              raise: each dispatch must fall back to its XLA arm and
              reproduce the oracle bit-for-bit;
   engine   — `raise:executor.run@0` forces one executor failure: the
-             degrade-once re-plan must reproduce the oracle.
+             degrade-once re-plan must reproduce the oracle;
+  memory   — `oom:executor.run@0` forces one allocation failure: the
+             executor must degrade onto the MORSEL rung (out-of-core
+             chunked execution, DESIGN.md §15) and reproduce the oracle.
 
 Escalated knobs change row order (partition bits) and padded shape
 (accumulator capacity), never the multiset of valid rows — so runs are
@@ -122,11 +125,23 @@ def smoke() -> int:
         failures.append("engine.no_degradation")
     cases.append(entry)
 
+    # -- memory: one forced oom, degrade onto the morsel rung ---------------
+    plan2 = optimize(q, cat, measure_profile=False)
+    with faults.inject("oom:executor.run@0"):
+        got = _canon(*plan2.run())
+    entry = _check("engine.oom_morsel_rung", oracle, got, failures)
+    entry["morsel_factor"] = (plan2.degraded_plan.morsel_factor
+                              if plan2.degraded_plan is not None else 0)
+    if entry["morsel_factor"] < 2:
+        failures.append("engine.oom_no_morsel_degradation")
+    cases.append(entry)
+
     snap = {k: v for k, v in sorted(metrics.snapshot().items())
             if k.startswith("resilience.")}
     for name in ("resilience.ladder_escalations",
                  "resilience.kernel_fallbacks",
                  "resilience.plan_degradations",
+                 "resilience.oom_injected",
                  "resilience.faults_fired"):
         if not snap.get(name):
             failures.append(f"counter_zero.{name}")

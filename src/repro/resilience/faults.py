@@ -16,7 +16,16 @@ disabled. Three fault families:
   * ``estimates:<x|/><factor>`` — multiply (x) or divide (/) the
     statistics layer's cardinality/distinct estimates by a factor,
     producing adversarially wrong capacities that the ladders must
-    recover from.
+    recover from;
+  * ``oom:<site>[@<when>]`` — make a named host-side allocation site
+    raise `OOMInjected` (a `MemoryError`), exercising the memory
+    governor: the executor's morsel-driven out-of-core rung
+    (`physical.degrade_plan(memory=True)`) and the query server's
+    byte-budget deferral path. Sites: ``executor.run`` (consulted once
+    per execution attempt, next to the `raise:` site) and
+    ``qserve.admit`` (the bytes-ticket reservation in
+    QueryServer._admit — an armed site defers the request instead of
+    admitting it).
 
 An optional ``seed:<int>`` spec makes the estimate corruption vary
 deterministically per site (hash of seed+site jitters the factor), so a
@@ -30,6 +39,7 @@ frozen at import)::
     spec         := overflow:<ladder>@<when>
                   | pallas:<site|*>[@<when>]
                   | raise:<site>[@<when>]
+                  | oom:<site>[@<when>]
                   | estimates:<x|/><factor>
                   | seed:<int>
     when         := all | <int>[+<int>...]      (attempt/occurrence indices)
@@ -78,6 +88,7 @@ ENV_VAR = "REPRO_FAULTS"
 _GRAMMAR = (
     "spec[,spec...] with spec := overflow:<ladder>@<when> | "
     "pallas:<site|*>[@<when>] | raise:<site>[@<when>] | "
+    "oom:<site>[@<when>] | "
     "estimates:<x|/><factor> | seed:<int>; when := all | <int>[+<int>...]"
 )
 
@@ -93,12 +104,19 @@ class FaultInjected(RuntimeError):
                          + (f": {detail}" if detail else ""))
 
 
+class OOMInjected(FaultInjected, MemoryError):
+    """Injected allocation failure. Subclasses MemoryError so the memory
+    classifier (`engine.membudget.is_memory_error`) routes it exactly like
+    a real backend RESOURCE_EXHAUSTED — onto the morsel rung, never the
+    capacity-doubling rung."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One parsed spec. `when` is None for 'all' (every occurrence),
     else a frozenset of occurrence indices."""
 
-    kind: str  # overflow | pallas | raise | estimates | seed
+    kind: str  # overflow | pallas | raise | oom | estimates | seed
     target: str  # ladder/site name, "*" wildcard, or "" for estimates/seed
     when: frozenset | None = None
     factor: float = 1.0  # estimates only (already inverted for '/')
@@ -170,12 +188,13 @@ def parse(value: str) -> FaultPlan:
                 raise _bad(spec, "overflow needs <ladder>@<when>")
             specs.append(FaultSpec("overflow", target,
                                    _parse_when(spec, when)))
-        elif kind in ("pallas", "raise"):
+        elif kind in ("pallas", "raise", "oom"):
             target, sep, when = rest.partition("@")
             if not target:
-                raise _bad(spec, f"{kind} needs a site name or '*'")
-            if kind == "raise" and target == "*":
-                raise _bad(spec, "raise:* would break host-side control "
+                raise _bad(spec, f"{kind} needs a site name"
+                                 + ("" if kind == "oom" else " or '*'"))
+            if kind in ("raise", "oom") and target == "*":
+                raise _bad(spec, f"{kind}:* would break host-side control "
                                  "flow everywhere; name a site")
             specs.append(FaultSpec(
                 kind, target, _parse_when(spec, when) if sep else None))
@@ -303,6 +322,19 @@ def check_site(site: str) -> None:
         if s.fires_at(_occurrence("raise", site)):
             _record("resilience.faults_fired")
             raise FaultInjected(site)
+    return
+
+
+def check_oom(site: str) -> None:
+    """Raise OOMInjected (a MemoryError) if an `oom:` spec targets this
+    host-side allocation site (e.g. 'executor.run', 'qserve.admit')."""
+    if not active():
+        return
+    for s in _active().matching("oom", site):
+        if s.fires_at(_occurrence("oom", site)):
+            _record("resilience.faults_fired")
+            _record("resilience.oom_injected")
+            raise OOMInjected(site, "allocation failure forced")
     return
 
 

@@ -37,6 +37,15 @@ nothing is a broken family). A final pressure pass pins the admission
 machinery: exact shed counts at a full queue, exact deadline evictions,
 and cost-based rejection under a tiny `max_price_s`.
 
+A memory pass then pins the byte-budget governor: big splittable queries
+(a wide-filter shape whose audited peak scales with the morsel axis)
+served under a budget below their whole-plan peak must complete via the
+morsel-driven out-of-core path bit-identical to their fault-free
+oracles, an injected `oom:executor.run@0` must recover through the
+chunked fallback, reserved bytes must never exceed the budget, standard
+queries must stay untouched on the fast path, and a never-fitting
+unsplittable query must be rejected with a typed error — not a crash.
+
 All chaos payloads are integers, so canonicalized results (sorted valid
 rows over sorted columns) are bit-identical across every execution
 strategy a breaker or ladder can pick.
@@ -46,14 +55,17 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.table import Table
 from repro.data import relgen
+from repro.engine import executor
 from repro.engine import stats as S
 from repro.engine.logical import scan
 from repro.engine.physical import optimize
 from repro.obs import metrics
-from repro.serve.query import QueryRequest, QueryServer
+from repro.serve.query import QueryRequest, QueryServer, pad_table, plan_signature
 
 SHAPES = ("join", "groupby", "groupjoin", "topk")
 FAMILY_TARGETS = {"overflow": "join", "pallas": "groupjoin",
@@ -155,7 +167,7 @@ def _drive(queries, fault_for=None, submit_per_tick: int = 4,
     reqs = []
     t0 = time.perf_counter()
     i = 0
-    while i < len(queries) or server.queue:
+    while i < len(queries) or server.queue or server.deferred:
         for _ in range(submit_per_tick):
             if i < len(queries):
                 q = queries[i]
@@ -237,6 +249,9 @@ def run_chaos(queries_per_family: int = 200, seed: int = 0,
     }
     check(baseline["plans_compiled"] == len(SHAPES),
           f"baseline.compiles={baseline['plans_compiled']} != {len(SHAPES)}")
+    # whole-plan audited peaks per standard signature (sized under the
+    # default — effectively unbounded — budget), for the memory pass
+    standard_peaks = {sig: e.peak_bytes for sig, e in server.cache.items()}
 
     # ---- fault families -------------------------------------------------
     family_reports = {}
@@ -366,11 +381,144 @@ def run_chaos(queries_per_family: int = 200, seed: int = 0,
                 "rejected": sum(r.error == "rejected" for r in rej),
                 "counters": _counter_delta(before)}
 
+    # ---- memory: byte budget, morsel out-of-core fallback, oom faults ---
+    # The big splittable shape is a wide multi-column filter: its audited
+    # peak scales linearly with the morsel axis. (Join-shaped plans carry
+    # a probe-size-independent hash-build structure, so at chaos scale
+    # they cannot shrink their peak much by chunking the probe side.)
+    before = _counter_window()
+    rngm = np.random.default_rng(seed + 7)
+    big_plan = scan("B").filter("c0", "<", 60)
+    big_qs = []
+    # sized so budget = 0.6 * whole-peak clears every standard shape's
+    # whole-plan peak (~17 MiB, dominated by the fixed PHJ build side)
+    for j in range(3):
+        cols = {f"c{c}": jnp.asarray(
+                    rngm.integers(0, 100, 250_000).astype(np.int32))
+                for c in range(48)}
+        big_qs.append(ChaosQuery(qid=3000 + j, shape="bigfilter",
+                                 plan=big_plan, tables={"B": Table(cols)}))
+    # size the big shape with the same machinery admission uses
+    _, bucketsB = plan_signature(big_plan, big_qs[0].tables)
+    paddedB = {n: pad_table(t, bucketsB[n])
+               for n, t in big_qs[0].tables.items()}
+    physB = optimize(big_plan, S.Catalog(paddedB), measure_profile=True)
+    big_whole = executor.plan_peak_bytes(
+        physB, paddedB,
+        counts={n: t.num_rows for n, t in big_qs[0].tables.items()})
+    budget = int(big_whole * 0.6)  # big must chunk; standard must fit
+    max_standard = max(standard_peaks.values())
+    check(budget > int(1.05 * max_standard),
+          f"memory.budget_too_small: budget={budget} vs "
+          f"standard peak {max_standard}")
+    for q in big_qs:
+        q.oracle = canon(*optimize(q.plan, S.Catalog(q.tables),
+                                   measure_profile=True).run())
+    # one join query in its OWN capacity bucket (S outside the standard
+    # 2048 bucket) gets an injected oom on its fast attempt: it must
+    # recover through the chunked fallback without perturbing the cached
+    # morsel factor of the standard join signature
+    seedo = int(np.random.default_rng(seed + 13).integers(0, 2**31 - 1))
+    R2, S2 = relgen.generate(relgen.JoinWorkload("cm", 350, 2500, 1, 1,
+                                                 seed=seedo))
+    oomq = ChaosQuery(qid=3100, shape="join", plan=PLANS["join"],
+                      tables={"R": R2, "S": S2})
+    oomq.oracle = canon(*optimize(oomq.plan, S.Catalog(oomq.tables),
+                                  measure_profile=True).run())
+
+    mem_queries = list(queries)
+    for pos, bq in zip((5, 17, 29), big_qs):
+        mem_queries.insert(min(pos, len(mem_queries)), bq)
+    mem_queries.append(oomq)
+
+    def mem_fault(q):
+        return "oom:executor.run@0" if q.qid == oomq.qid else ""
+
+    server, reqs, _, wall = _drive(
+        mem_queries, fault_for=mem_fault,
+        server_kw=dict(mem_budget_bytes=budget))
+    req_by_qid = {r.qid: r for r in reqs}
+    wrong = contaminated = 0
+    for q in mem_queries:
+        req = req_by_qid[q.qid]
+        if not (req.done and not req.error and req.result is not None):
+            check(False, f"memory.q{q.qid}: {req.error or 'not done'} "
+                         f"{req.detail}")
+            continue
+        if canon(*req.result) != q.oracle:
+            wrong += 1
+        if q.qid < 3000 and (req.path != "fast" or req.morsels != 1
+                             or req.escalations):
+            contaminated += 1
+    check(wrong == 0, f"memory.wrong_results={wrong}")
+    check(contaminated == 0, f"memory.contaminated={contaminated}")
+    for bq in big_qs:
+        check(req_by_qid[bq.qid].morsels >= 2,
+              f"memory.q{bq.qid}.not_chunked "
+              f"(morsels={req_by_qid[bq.qid].morsels})")
+    # the injected oom is caught INSIDE executor.run, which degrades the
+    # plan onto its morsel rung before the server ever sees a failure:
+    # the request stays fast-path, the engine counters record the rescue
+    check(req_by_qid[oomq.qid].path == "fast",
+          f"memory.oom_query_path={req_by_qid[oomq.qid].path}")
+    check(server.budget.peak_reserved <= server.budget.total,
+          f"memory.reserved_over_budget: {server.budget.peak_reserved} > "
+          f"{server.budget.total}")
+    check(server.budget.reserved == 0, "memory.reservations_leaked")
+
+    # blast radius: standard signatures' warm p99 within 2x baseline
+    walls = _warm_walls(reqs)
+    mem_confinement = {}
+    for s in SHAPES:
+        p99 = metrics.percentiles(walls.get(sig_of_shape[s], []),
+                                  (99,))["p99"]
+        base = base_shape_p99[s]
+        mem_confinement[s] = {"p99_s": p99, "baseline_p99_s": base}
+        check(p99 <= max(2 * base, base + 0.010),
+              f"memory.p99_blowup.{s}: {p99:.4f}s vs base {base:.4f}s")
+
+    # a never-fitting unsplittable shape (top-k root has no morsel axis)
+    # must be REJECTED with the typed error, not crash the server
+    tq = by_shape["topk"][0]
+    rej_server = QueryServer(measure_profile=True, mem_budget_bytes=4096)
+    rej_req = QueryRequest(qid=3200, plan=tq.plan, tables=tq.tables)
+    rej_server.submit(rej_req)
+    rej_server.run()
+    check(rej_req.error == "rejected",
+          f"memory.unsplittable_not_rejected: {rej_req.error}")
+    check("MemoryBudgetExceeded" in (rej_req.detail or ""),
+          f"memory.reject_detail: {rej_req.detail}")
+
+    mem_delta = _counter_delta(before)
+    check(mem_delta.get("qserve.chunked_runs", 0) >= 3,
+          f"memory.chunked_runs={mem_delta.get('qserve.chunked_runs', 0)}")
+    check(mem_delta.get("qserve.mem_rejections", 0) >= 1,
+          "memory.no_mem_rejections")
+    check(mem_delta.get("resilience.oom_injected", 0) >= 1,
+          "memory.oom_never_fired")
+    check(mem_delta.get("resilience.plan_degradations", 0) >= 1,
+          "memory.oom_not_rescued_by_morsel_rung")
+    memory_report = {
+        "budget_bytes": budget, "big_whole_peak_bytes": big_whole,
+        "max_standard_peak_bytes": max_standard,
+        "big_morsels": [req_by_qid[bq.qid].morsels for bq in big_qs],
+        "chunked_runs": mem_delta.get("qserve.chunked_runs", 0),
+        "mem_deferrals": mem_delta.get("qserve.mem_deferrals", 0),
+        "mem_rejections": mem_delta.get("qserve.mem_rejections", 0),
+        "oom_injected": mem_delta.get("resilience.oom_injected", 0),
+        "reserved_le_budget": bool(server.budget.peak_reserved
+                                   <= server.budget.total),
+        "peak_reserved_bytes": server.budget.peak_reserved,
+        "wrong_results": wrong, "contaminated": contaminated,
+        "confinement": mem_confinement, "wall_s": wall,
+        "counters": mem_delta,
+    }
+
     return {
         "ok": not failures, "failures": failures,
         "config": {"queries_per_family": queries_per_family, "seed": seed,
                    "smoke": smoke, "shapes": list(SHAPES),
                    "families": list(families)},
         "baseline": baseline, "families": family_reports,
-        "pressure": pressure,
+        "pressure": pressure, "memory": memory_report,
     }

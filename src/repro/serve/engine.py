@@ -21,6 +21,15 @@ most-recently-admitted slot is evicted (requeued while it has retry
 budget, failed alone once it doesn't) so one poisoned query cannot take
 down the batch. The cache is only ever reassigned on a successful step,
 so a failed step leaves every surviving slot's state untouched.
+
+Memory governance (DESIGN.md §15): an optional byte budget
+(`mem_budget_bytes`) gates slot admission — a request declaring
+`mem_bytes` buys a reservation ticket before it takes a slot. A queue
+head whose ticket does not fit is DEFERRED, not admitted and not shed:
+it holds its queue position, ages in `ticks_deferred` (never in
+`ticks_queued` or `ticks_running`), and retries every tick until enough
+in-flight work releases its tickets. Every slot-exit path — completion,
+deadline eviction, poisoned eviction, requeue — releases the ticket.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.engine import membudget as MB
 from repro.models import model as M
 from repro.obs import metrics
 from repro.resilience import escalation, faults
@@ -71,6 +81,9 @@ class Request:
     # re-admissions allowed after this request's slot is evicted for a
     # persistent step failure before it is failed alone
     retries_left: int = 1
+    # bytes this request's slot state needs while live; admission reserves
+    # them against the engine's budget (0 = exempt from the governor)
+    mem_bytes: int = 0
     # -- latency breakdown (engine ticks; accumulated across requeues and
     # observed into the serve.ticks_* histograms when the request ends) --
     submit_tick: int = -1
@@ -78,6 +91,7 @@ class Request:
     ticks_queued: int = 0   # ticks spent waiting in the queue
     ticks_running: int = 0  # ticks spent live in a slot
     ticks_retrying: int = 0  # failed step attempts charged while live
+    ticks_deferred: int = 0  # ticks blocked at the queue head on memory
     _enqueued_at: int = dataclasses.field(default=0, repr=False)
 
 
@@ -86,10 +100,12 @@ class ServeEngine:
                  max_len: int = 256, eos_id: int = 2, batch_stub=None,
                  dtype=jnp.float32, step_fn: Callable | None = None,
                  max_queue: int | None = None, step_retries: int = 2,
-                 retry_backoff_s: float = 0.005):
+                 retry_backoff_s: float = 0.005,
+                 mem_budget_bytes: int | None = None):
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_len, self.eos_id = max_batch, max_len, eos_id
         self.max_queue = max_queue
+        self.budget = MB.MemoryBudget(mem_budget_bytes)
         self.step_retries = step_retries
         self.retry_backoff_s = retry_backoff_s
         stub = batch_stub or {}
@@ -118,13 +134,14 @@ class ServeEngine:
         metrics.histogram("serve.ticks_queued").observe(req.ticks_queued)
         metrics.histogram("serve.ticks_running").observe(req.ticks_running)
         metrics.histogram("serve.ticks_retrying").observe(req.ticks_retrying)
+        metrics.histogram("serve.ticks_deferred").observe(req.ticks_deferred)
 
     @staticmethod
     def latency_summary(pcts=(50, 95, 99)) -> dict:
         """Per-stage tick percentiles over every finished request."""
         return {name: metrics.histogram(f"serve.{name}").summary(pcts)
                 for name in ("ticks_queued", "ticks_running",
-                             "ticks_retrying")}
+                             "ticks_retrying", "ticks_deferred")}
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
@@ -152,6 +169,18 @@ class ServeEngine:
                 return
         for i in range(self.max_batch):
             if self.slot_req[i] is None and self.queue:
+                head = self.queue[0]
+                if head.mem_bytes and not self.budget.try_reserve(
+                        f"r{head.rid}", head.mem_bytes):
+                    # memory-deferred: the head keeps its queue position
+                    # and ages as DEFERRED — not queued, and certainly not
+                    # running. No one jumps past it (FIFO under pressure,
+                    # so a big request cannot starve behind small ones).
+                    head.ticks_queued += self.tick - head._enqueued_at
+                    head._enqueued_at = self.tick
+                    head.ticks_deferred += 1
+                    metrics.counter("serve.mem_deferrals").inc()
+                    break
                 req = self.queue.pop(0)
                 req.ticks_queued += self.tick - req._enqueued_at
                 self.slot_req[i] = req
@@ -176,6 +205,7 @@ class ServeEngine:
                 req.error, req.done = "deadline", True
                 self._finish(req)
                 self.slot_req[i] = None
+                self.budget.release(f"r{req.rid}")
                 metrics.counter("resilience.serve_deadline_evictions").inc()
         overdue = [r for r in self.queue if self._overdue(r)]
         if overdue:
@@ -194,6 +224,7 @@ class ServeEngine:
         i = max(live, key=lambda j: self._slot_seq[j])
         req = self.slot_req[i]
         self.slot_req[i] = None
+        self.budget.release(f"r{req.rid}")
         self._hold_admission = True
         metrics.counter("resilience.serve_evictions").inc()
         escalation.record_degradation(
@@ -252,6 +283,7 @@ class ServeEngine:
                 req.done = True
                 self._finish(req)
                 self.slot_req[i] = None  # free slot for continuous batching
+                self.budget.release(f"r{req.rid}")
         return True
 
     def run(self, max_ticks: int = 10_000):

@@ -37,10 +37,22 @@ re-run on the safe path, which escalates `degrade_plan` levels (capacity
 x2 per level) until the result fits, then remembers the converged level
 on the cache entry.
 
+Memory governor (DESIGN.md §15): admission also buys a *bytes ticket* —
+each signature's audited `peak_live_bytes` (computed once, cached on the
+entry) must fit ``budget - reserved`` (`engine.membudget.MemoryBudget`).
+Over-budget-but-splittable signatures run out-of-core through the morsel
+driver (`executor.run_morsels`) at the smallest fitting power-of-two
+factor; a request whose ticket doesn't fit *right now* is DEFERRED
+(off-queue, so it never starves fresh submissions of max_queue slots);
+a signature that can never fit is rejected with the typed
+`MemoryBudgetExceeded`. Tickets release when the run leaves the server,
+on every path.
+
 Chaos hooks: each request's `fault_spec` (the `repro.resilience.faults`
 grammar) is activated around ITS planning/execution only, and the
 host-side sites `qserve.plan` / `qserve.execute` can be targeted by
-`raise:` specs. See serve/chaos.py for the soak harness.
+`raise:` specs (`oom:qserve.admit` / `oom:executor.run` inject
+allocation failures). See serve/chaos.py for the soak harness.
 """
 from __future__ import annotations
 
@@ -54,6 +66,7 @@ import jax.numpy as jnp
 
 from repro.core.table import Table
 from repro.engine import executor
+from repro.engine import membudget as MB
 from repro.engine import physical as P
 from repro.engine import stats as S
 from repro.obs import metrics
@@ -238,9 +251,14 @@ class QueryRequest:
     admit_tick: int = -1
     done_tick: int = -1
     ticks_queued: int = 0
+    # ticks spent memory-deferred: the bytes ticket didn't fit
+    # `budget - reserved`, so the request waited WITHOUT occupying a
+    # max_queue slot (DESIGN.md §15)
+    ticks_deferred: int = 0
     plan_wall_s: float = 0.0
     exec_wall_s: float = 0.0
     escalations: int = 0  # safe-path degrade-level escalations
+    morsels: int = 1  # morsel factor the result was produced at (1 = whole)
 
 
 @dataclasses.dataclass
@@ -258,6 +276,15 @@ class CompiledEntry:
     hits: int = 0
     safe_level: int = 0
     degraded_chain: list = dataclasses.field(default_factory=list, repr=False)
+    # -- memory governor (DESIGN.md §15) -------------------------------------
+    # the bytes ticket admission buys: the audited peak-live watermark of
+    # the form this signature actually runs (whole plan, or the smallest
+    # fitting morsel clone when the whole plan exceeds the budget)
+    peak_bytes: int = 0
+    # 1 = whole-plan execution fits; >= 2 = run through the morsel driver
+    # at this factor; 0 = NEVER fits (no morsel axis, or no factor small
+    # enough) — admission rejects with MemoryBudgetExceeded
+    morsel_factor: int = 1
 
     def degraded(self, level: int) -> P.PhysicalPlan:
         """The plan with `degrade_plan` applied `level` times (level 0 =
@@ -296,6 +323,7 @@ class QueryServer:
                  slots_per_tick: int = 4,
                  tick_budget_s: float = float("inf"),
                  max_price_s: float = float("inf"),
+                 mem_budget_bytes: int | None = None,
                  safety: float = 1.5, measure_profile: bool = False,
                  breaker_threshold: int = 2, breaker_cooldown: int = 8,
                  breaker_max_cooldown: int = 64, max_safe_level: int = 6):
@@ -303,6 +331,10 @@ class QueryServer:
         self.slots_per_tick = slots_per_tick
         self.tick_budget_s = tick_budget_s
         self.max_price_s = max_price_s
+        # bytes ticket (DESIGN.md §15): each admitted request reserves its
+        # signature's peak-live bytes until its run finishes; default
+        # budget is backend-detected / REPRO_MEM_BUDGET_BYTES
+        self.budget = MB.MemoryBudget(mem_budget_bytes)
         self.safety = safety
         self.measure_profile = measure_profile
         self.breaker_kw = dict(threshold=breaker_threshold,
@@ -312,6 +344,10 @@ class QueryServer:
         self.cache: dict[str, CompiledEntry] = {}
         self.breakers: dict[str, CircuitBreaker] = {}
         self.queue: list[QueryRequest] = []
+        # memory-deferred requests: planned and priced, waiting for budget
+        # headroom. NOT part of `queue` — a stuck large query must not
+        # occupy a max_queue slot and starve fresh submissions
+        self.deferred: list[QueryRequest] = []
         self.completed: list[QueryRequest] = []
         self.tick = 0
 
@@ -338,11 +374,13 @@ class QueryServer:
         self.completed.append(req)
 
     def _sweep_deadlines(self) -> None:
-        overdue = [r for r in self.queue if r.deadline_ticks is not None
+        overdue = [r for r in self.queue + self.deferred
+                   if r.deadline_ticks is not None
                    and self.tick >= r.deadline_ticks]
         if not overdue:
             return
         self.queue = [r for r in self.queue if r not in overdue]
+        self.deferred = [r for r in self.deferred if r not in overdue]
         for req in overdue:
             metrics.counter("qserve.deadline_evictions").inc()
             self._finish(req, "deadline")
@@ -366,6 +404,7 @@ class QueryServer:
                               measure_profile=self.measure_profile)
             entry = CompiledEntry(signature=sig, buckets=buckets, plan=phys,
                                   price_s=float(phys.total_cost))
+            self._size_entry(entry, padded)
             self.cache[sig] = entry
             metrics.counter("qserve.plans_compiled").inc()
         else:
@@ -375,9 +414,78 @@ class QueryServer:
         req.plan_wall_s = time.perf_counter() - t0
         return entry
 
+    def _size_entry(self, entry: CompiledEntry, padded: Mapping) -> None:
+        """Size a fresh entry's bytes ticket (DESIGN.md §15): the audited
+        peak-live watermark of the bucketed form the signature runs. When
+        the whole plan exceeds the TOTAL budget, probe power-of-two morsel
+        factors (smallest first) for the first clone whose peak fits and
+        cache it — the ticket is then the MORSEL peak, and every run of
+        the signature goes through the morsel driver. No fitting factor
+        (or no morsel axis) leaves ``morsel_factor = 0``: the signature
+        can never fit, and admission rejects it with the typed error."""
+        counts = {n: t.num_rows for n, t in padded.items()}
+        entry.peak_bytes = executor.plan_peak_bytes(
+            entry.plan, padded, counts=counts)
+        if entry.peak_bytes <= self.budget.total:
+            return
+        axis = P.morsel_axis(entry.plan.root)
+        if axis is None:
+            entry.morsel_factor = 0
+            return
+        rows = entry.buckets[axis]
+        factor = 2
+        while True:
+            try:
+                mp = P.morsel_plan(entry.plan, factor, rows=rows)
+            except ValueError:  # no recombinable partial rewrite
+                break
+            m = P.morsel_rows(rows, factor)
+            mtables = dict(padded)
+            mtables[axis] = padded[axis].head(m)
+            mcounts = dict(counts)
+            mcounts[axis] = m
+            peak = executor.plan_peak_bytes(mp, mtables, counts=mcounts)
+            if peak <= self.budget.total:
+                entry.peak_bytes = peak
+                entry.morsel_factor = factor
+                return
+            if m <= MIN_BUCKET:
+                break  # morsels can't shrink further
+            factor *= 2
+        entry.morsel_factor = 0  # never fits
+
+    def _try_reserve(self, entry: CompiledEntry, req: QueryRequest) -> bool:
+        """Buy the request's bytes ticket: reserve the entry's peak against
+        `budget - reserved`. The `oom:qserve.admit` fault site models an
+        allocation race lost at admission — an injected hit counts as a
+        failed reservation (the request defers), never as an error."""
+        try:
+            with self._fault_ctx(req):
+                faults.check_oom("qserve.admit")
+        except faults.OOMInjected:
+            return False
+        return self.budget.try_reserve(f"q{req.qid}", entry.peak_bytes)
+
     def _admit(self) -> list[QueryRequest]:
         batch: list[QueryRequest] = []
         spent = 0.0
+        # memory-deferred requests retry FIRST (FIFO seniority: they were
+        # submitted before anything still in the queue), sharing the tick's
+        # slot and seconds budgets with fresh admissions
+        still_deferred: list[QueryRequest] = []
+        for i, req in enumerate(self.deferred):
+            entry = self.cache[req.signature]
+            if len(batch) >= self.slots_per_tick or (
+                    batch and spent + req.price_s > self.tick_budget_s):
+                still_deferred.extend(self.deferred[i:])
+                break
+            if not self._try_reserve(entry, req):
+                still_deferred.append(req)
+                continue
+            spent += req.price_s
+            req.admit_tick = self.tick
+            batch.append(req)
+        self.deferred = still_deferred
         while self.queue and len(batch) < self.slots_per_tick:
             req = self.queue[0]
             try:
@@ -401,8 +509,30 @@ class QueryServer:
                 self._finish(req, "rejected",
                              f"price {req.price_s:.6f}s > cap")
                 continue
+            entry = self.cache[req.signature]
+            if entry.morsel_factor == 0:
+                # can NEVER fit the device budget, at any morsel factor:
+                # typed rejection, not a crash or an eternal deferral
+                self.queue.pop(0)
+                exc = MB.MemoryBudgetExceeded(
+                    entry.peak_bytes, self.budget.total,
+                    "unsplittable at any morsel factor")
+                metrics.counter("qserve.mem_rejections").inc()
+                escalation.record_degradation(
+                    "qserve", f"mem-rejected qid={req.qid}: {exc}"[:160])
+                self._finish(req, "rejected", f"{type(exc).__name__}: {exc}")
+                continue
             if batch and spent + req.price_s > self.tick_budget_s:
                 break  # FIFO head waits for a tick with budget headroom
+            if not self._try_reserve(entry, req):
+                # splittable and budget-sized, just not NOW: defer without
+                # holding a max_queue slot; retried next tick. Queue time
+                # freezes here — deferred ticks accrue separately
+                self.queue.pop(0)
+                req.ticks_queued = self.tick - req.submit_tick
+                metrics.counter("qserve.mem_deferrals").inc()
+                self.deferred.append(req)
+                continue
             self.queue.pop(0)
             spent += req.price_s
             req.admit_tick = self.tick
@@ -420,7 +550,16 @@ class QueryServer:
     def _run_fast(self, entry: CompiledEntry, req: QueryRequest):
         faults.check_site("qserve.execute")
         padded, counts = self._pad_inputs(entry, req)
-        out, count = executor.run(entry.plan, padded, counts=counts)
+        if entry.morsel_factor > 1:
+            # budget-sized signature: out-of-core morsel path, one chunk
+            # at a time through the cached morsel clone's executable
+            out, count = executor.run_morsels(
+                entry.plan, padded, counts=counts,
+                factor=entry.morsel_factor)
+            metrics.counter("qserve.chunked_runs").inc()
+            req.morsels = entry.morsel_factor
+        else:
+            out, count = executor.run(entry.plan, padded, counts=counts)
         metrics.counter("qserve.fast_runs").inc()
         if _saturated(entry.plan.root, count):
             metrics.counter("qserve.saturations").inc()
@@ -459,44 +598,95 @@ class QueryServer:
             f"safe path exhausted at level {self.max_safe_level}"
         ) from last_exc
 
+    def _run_chunked_safe(self, entry: CompiledEntry, req: QueryRequest):
+        """Memory fallback: a run that hit an allocation failure retries
+        out-of-core, climbing power-of-two morsel factors until one fits
+        the device. The converged factor is cached on the entry so later
+        runs of the signature go straight to the morsel path."""
+        axis = P.morsel_axis(entry.plan.root)
+        if axis is None:
+            raise MB.MemoryBudgetExceeded(
+                entry.peak_bytes, self.budget.total, "no morsel axis")
+        padded, counts = self._pad_inputs(entry, req)
+        rows = entry.buckets[axis]
+        factor = max(entry.morsel_factor, 1) * 2
+        last_exc: Exception | None = None
+        while factor <= max(rows // MIN_BUCKET, 2):
+            try:
+                out, count = executor.run_morsels(
+                    entry.plan, padded, counts=counts, factor=factor)
+            except executor._NON_DEGRADABLE:
+                raise
+            except Exception as e:  # noqa: BLE001 — shrink and retry
+                if not MB.is_memory_error(e):
+                    raise
+                last_exc = e
+                factor *= 2
+                continue
+            entry.morsel_factor = factor
+            metrics.counter("qserve.chunked_runs").inc()
+            req.morsels = factor
+            return out, count
+        raise MB.MemoryBudgetExceeded(
+            entry.peak_bytes, self.budget.total,
+            f"morsel factors exhausted at {factor // 2}") from last_exc
+
+    def _fallback(self, entry: CompiledEntry, req: QueryRequest,
+                  fast_exc: Exception):
+        """The same-tick fallback after a fast failure: allocation
+        failures of a splittable plan go out-of-core (`_run_chunked_safe`
+        — a SMALLER working set); everything else climbs the
+        capacity-doubling safe chain."""
+        if (MB.is_memory_error(fast_exc)
+                and P.morsel_axis(entry.plan.root) is not None):
+            return self._run_chunked_safe(entry, req)
+        return self._run_safe(entry, req)
+
     def _run_one(self, req: QueryRequest) -> None:
         entry = self.cache[req.signature]
         breaker = self.breakers[req.signature]
         t0 = time.perf_counter()
-        with self._fault_ctx(req):
-            route = breaker.route(self.tick)
-            try:
-                if route == "fast":
-                    out = self._run_fast(entry, req)
-                else:
-                    out = self._run_safe(entry, req)
-            except executor._NON_DEGRADABLE:
-                raise  # programming errors surface; never quarantine a bug
-            except Exception as e:  # noqa: BLE001 — contain to this request
-                if route == "fast":
-                    breaker.record_fast_failure(self.tick)
-                    metrics.counter("qserve.fast_failures").inc()
-                    try:
+        try:
+            with self._fault_ctx(req):
+                route = breaker.route(self.tick)
+                try:
+                    if route == "fast":
+                        out = self._run_fast(entry, req)
+                    else:
                         out = self._run_safe(entry, req)
-                        route = "fast+safe"
-                    except executor._NON_DEGRADABLE:
-                        raise
-                    except Exception as e2:  # noqa: BLE001
+                except executor._NON_DEGRADABLE:
+                    raise  # programming errors surface; never quarantine
+                except Exception as e:  # noqa: BLE001 — contain to request
+                    if route == "fast":
+                        breaker.record_fast_failure(self.tick)
+                        metrics.counter("qserve.fast_failures").inc()
+                        try:
+                            out = self._fallback(entry, req, e)
+                            route = "fast+safe"
+                        except executor._NON_DEGRADABLE:
+                            raise
+                        except Exception as e2:  # noqa: BLE001
+                            breaker.record_safe_failure(self.tick)
+                            metrics.counter("qserve.failed").inc()
+                            req.exec_wall_s = time.perf_counter() - t0
+                            self._finish(req, "failed",
+                                         f"{type(e2).__name__}: {e2}")
+                            return
+                    else:
                         breaker.record_safe_failure(self.tick)
                         metrics.counter("qserve.failed").inc()
                         req.exec_wall_s = time.perf_counter() - t0
                         self._finish(req, "failed",
-                                     f"{type(e2).__name__}: {e2}")
+                                     f"{type(e).__name__}: {e}")
                         return
                 else:
-                    breaker.record_safe_failure(self.tick)
-                    metrics.counter("qserve.failed").inc()
-                    req.exec_wall_s = time.perf_counter() - t0
-                    self._finish(req, "failed", f"{type(e).__name__}: {e}")
-                    return
-            else:
-                if route == "fast":
-                    breaker.record_fast_success(self.tick)
+                    if route == "fast":
+                        breaker.record_fast_success(self.tick)
+        finally:
+            # the bytes ticket is held from admission to HERE — every exit
+            # path (success, failure, even a surfacing programming error)
+            # releases it, so reservations can never leak
+            self.budget.release(f"q{req.qid}")
         req.exec_wall_s = time.perf_counter() - t0
         req.result = out
         req.path = route
@@ -513,14 +703,21 @@ class QueryServer:
         self.tick += 1
         self._sweep_deadlines()
         batch = self._admit()
+        # the post-admission ledger is the tick's high-water mark: every
+        # ticket bought this tick is reserved, nothing has released yet
+        metrics.histogram("qserve.bytes_reserved").observe(
+            float(self.budget.reserved))
+        for req in self.deferred:
+            req.ticks_deferred += 1
         for req in batch:
             self._run_one(req)
-        return bool(batch) or bool(self.queue)
+        return bool(batch) or bool(self.queue) or bool(self.deferred)
 
     def run(self, max_ticks: int = 100_000) -> int:
-        """Step until the queue drains (or `max_ticks`). Returns ticks."""
+        """Step until the queue and deferred list drain (or `max_ticks`).
+        Returns ticks."""
         ticks = 0
-        while self.queue and ticks < max_ticks:
+        while (self.queue or self.deferred) and ticks < max_ticks:
             self.step()
             ticks += 1
         return ticks

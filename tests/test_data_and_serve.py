@@ -165,6 +165,31 @@ def test_slot_reuse_no_leak(rng):
     assert r2.out == r_ref.out, (r2.out, r_ref.out)
 
 
+def test_serve_engine_memory_deferral_accounting(rng):
+    """A memory-deferred request must age as DEFERRED — never as running
+    and not as plain queue time — and still complete once in-flight work
+    releases its bytes ticket; latency_summary() reports the stage."""
+    cfg = get_reduced_config("olmo-1b")
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, eos_id=-1,
+                      mem_budget_bytes=1000)
+    prompts = [rng.integers(3, cfg.vocab_size, 3).tolist() for _ in range(2)]
+    r1 = Request(rid=0, prompt=prompts[0], max_tokens=4, mem_bytes=800)
+    r2 = Request(rid=1, prompt=prompts[1], max_tokens=4, mem_bytes=800)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.run()
+    assert r1.done and r2.done and not r1.error and not r2.error
+    # 800 + 800 > 1000: r2 held the queue head until r1 released
+    assert r1.ticks_deferred == 0
+    assert r2.ticks_deferred > 0
+    # deferral never counts as slot residency: both ran the same ticks
+    assert r2.ticks_running == r1.ticks_running
+    assert eng.budget.reserved == 0
+    assert eng.budget.peak_reserved <= 1000
+    assert "ticks_deferred" in ServeEngine.latency_summary()
+
+
 def test_vector_pos_decode_matches_scalar(rng):
     """decode_step with a constant (b,) pos vector == scalar pos."""
     import jax

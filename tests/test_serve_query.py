@@ -102,7 +102,8 @@ def test_executor_counts_reuse_one_compiled_plan():
 # ---------------------------------------------------------------------------
 def drive(server, reqs, per_tick=4, max_ticks=500):
     i = 0
-    while (i < len(reqs) or server.queue) and server.tick < max_ticks:
+    while (i < len(reqs) or server.queue
+           or server.deferred) and server.tick < max_ticks:
         for _ in range(per_tick):
             if i < len(reqs):
                 server.submit(reqs[i])
@@ -242,6 +243,118 @@ def test_server_saturation_escalates_to_correct_result():
     for r in reqs:
         assert r.done and not r.error, (r.qid, r.detail)
         assert canon(*r.result) == one_shot(plan, r.tables)
+
+
+# ---------------------------------------------------------------------------
+# memory governor (DESIGN.md §15): bytes tickets, deferral, morsel runs
+# ---------------------------------------------------------------------------
+def test_server_mem_rejects_unsplittable_with_typed_error():
+    """A query that can NEVER fit the budget (top-k has no morsel axis)
+    must be rejected with the typed error — not crash, not defer forever."""
+    tables = {"S": relgen.generate(
+        relgen.JoinWorkload("t", 5000, 1500, 1, 1, seed=9))[1]}
+    plan = scan("S").filter("s1", "<", 1 << 30).order_by("s1", limit=32)
+    before = metrics.counter("qserve.mem_rejections").value
+    server = Q.QueryServer(measure_profile=False, mem_budget_bytes=4096)
+    req = Q.QueryRequest(qid=0, plan=plan, tables=tables)
+    server.submit(req)
+    server.run()
+    assert req.error == "rejected"
+    assert "MemoryBudgetExceeded" in req.detail
+    assert metrics.counter("qserve.mem_rejections").value == before + 1
+    assert server.budget.reserved == 0
+
+
+def test_server_chunked_run_bit_identical_under_tight_budget():
+    """A splittable query whose whole-plan peak exceeds the budget must be
+    served through the morsel driver, bit-identical to its oracle."""
+    rng = np.random.default_rng(11)
+    mk = lambda: {"B": Table(  # noqa: E731
+        {f"c{c}": jnp.asarray(rng.integers(0, 100, 30_000).astype(np.int32))
+         for c in range(16)})}
+    plan = scan("B").filter("c0", "<", 60)
+    t0 = mk()
+    padded = {n: Q.pad_table(t, Q.bucket_rows(t.num_rows))
+              for n, t in t0.items()}
+    phys = optimize(plan, Catalog(padded), measure_profile=False)
+    from repro.engine import plan_peak_bytes
+    whole = plan_peak_bytes(phys, padded,
+                            counts={n: t.num_rows for n, t in t0.items()})
+    before = metrics.counter("qserve.chunked_runs").value
+    server = Q.QueryServer(measure_profile=False,
+                           mem_budget_bytes=int(whole * 0.6))
+    reqs = [Q.QueryRequest(qid=i, plan=plan, tables=t0 if i == 0 else mk())
+            for i in range(2)]
+    drive(server, reqs, per_tick=1)
+    for r in reqs:
+        assert r.done and not r.error, (r.qid, r.detail)
+        assert r.morsels >= 2
+        assert canon(*r.result) == one_shot(plan, r.tables)
+    entry = server.cache[reqs[0].signature]
+    assert entry.morsel_factor >= 2  # sized ticket is the MORSEL peak
+    assert entry.peak_bytes <= server.budget.total
+    assert metrics.counter("qserve.chunked_runs").value == before + 2
+    assert server.budget.reserved == 0
+    assert server.budget.peak_reserved <= server.budget.total
+
+
+def test_server_same_tick_contention_defers_not_sheds():
+    """Two same-signature queries whose tickets cannot co-reside: the
+    second DEFERS (ages in ticks_deferred, keeps no queue slot) and
+    completes once the first releases its reservation."""
+    tables = make_join_tables(400, 1500, seed=21)
+    server0 = Q.QueryServer(measure_profile=False)
+    probe = Q.QueryRequest(qid=99, plan=JOIN_PLAN, tables=tables)
+    server0.submit(probe)
+    server0.run()
+    peak = server0.cache[probe.signature].peak_bytes
+    assert peak > 0
+
+    before = metrics.counter("qserve.mem_deferrals").value
+    server = Q.QueryServer(measure_profile=False, slots_per_tick=2,
+                           mem_budget_bytes=int(peak * 1.5))
+    reqs = [Q.QueryRequest(qid=i, plan=JOIN_PLAN, tables=tables)
+            for i in range(2)]
+    drive(server, reqs, per_tick=2)
+    for r in reqs:
+        assert r.done and not r.error, (r.qid, r.detail)
+        assert canon(*r.result) == one_shot(JOIN_PLAN, tables)
+    assert metrics.counter("qserve.mem_deferrals").value > before
+    assert reqs[1].ticks_deferred > 0
+    assert reqs[0].ticks_deferred == 0
+    assert server.budget.reserved == 0
+    assert server.budget.peak_reserved <= server.budget.total
+
+
+def test_server_deferred_request_does_not_starve_queue():
+    """Regression: a memory-deferred request must NOT occupy a max_queue
+    slot. With the old accounting a stuck query wedged a tiny queue and
+    every later submission was shed."""
+    tables = make_join_tables(350, 1300, seed=31)
+    before_shed = metrics.counter("qserve.shed").value
+    server = Q.QueryServer(measure_profile=False, max_queue=2,
+                           slots_per_tick=2)
+    # loses the (injected) allocation race on EVERY admission attempt:
+    # permanently deferred until its deadline evicts it
+    stuck = Q.QueryRequest(qid=0, plan=JOIN_PLAN, tables=tables,
+                           fault_spec="oom:qserve.admit", deadline_ticks=8)
+    server.submit(stuck)
+    server.step()
+    assert stuck in server.deferred and not server.queue
+    later = [Q.QueryRequest(qid=1 + i, plan=JOIN_PLAN, tables=tables)
+             for i in range(4)]
+    for pair in (later[:2], later[2:]):
+        for r in pair:
+            server.submit(r)  # queue holds 2: at cap, NOT over it
+        while server.queue:
+            server.step()
+    server.run()
+    assert metrics.counter("qserve.shed").value == before_shed
+    for r in later:
+        assert r.done and not r.error, (r.qid, r.detail)
+    assert stuck.error == "deadline"
+    assert stuck.ticks_deferred > 0
+    assert server.budget.reserved == 0
 
 
 def test_chaos_smoke_single_family():
